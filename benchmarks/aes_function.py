@@ -1,0 +1,44 @@
+"""The paper's benchmark function on this host: AES-128-CTR over a 600-byte
+input — measured for the XLA oracle and the Pallas kernel (interpret mode;
+compiled-TPU timing is out of scope on CPU)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ops import aes_ctr
+
+N_BLOCKS = 38   # ceil(600/16)
+
+
+def _time(fn, *args, iters=50):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(verbose=True):
+    key_bytes = jnp.arange(16, dtype=jnp.int32)
+    pt = jax.random.randint(jax.random.PRNGKey(0), (N_BLOCKS, 16), 0, 256)
+
+    jit_ref = jax.jit(lambda p: ref.aes_ctr_ref(p, key_bytes))
+    us_xla = _time(jit_ref, pt)
+    us_interp = _time(lambda p: aes_ctr(p, key_bytes, backend="pallas_interpret"),
+                      pt, iters=3)
+    if verbose:
+        print("# AES-128-CTR(600B) — the deployed FaaS function body")
+        print(f"  XLA jit (CPU)          : {us_xla:9.1f} us/call")
+        print(f"  Pallas interpret (CPU) : {us_interp:9.1f} us/call "
+              "(correctness mode; TPU is the target)")
+    return [("aes600b_xla_cpu", us_xla, "us/call"),
+            ("aes600b_pallas_interpret", us_interp, "us/call")], {}
+
+
+if __name__ == "__main__":
+    run()

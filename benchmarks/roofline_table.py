@@ -1,0 +1,46 @@
+"""The 40-pair roofline table from the dry-run records (§Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(mesh: str = "pod16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(verbose=True):
+    recs = load_records()
+    rows = []
+    if verbose:
+        print("# roofline table (single-pod 16x16 = 256 chips, v5e terms)")
+        print(f"  {'arch':25s} {'shape':12s} {'compute_ms':>10s} {'memory_ms':>10s} "
+              f"{'coll_ms':>9s} {'bound':>10s} {'useful':>7s} {'mem_GB':>7s}")
+    for rec in recs:
+        roof = rec.get("roofline")
+        if not roof:
+            continue
+        if verbose:
+            print(f"  {rec['arch']:25s} {rec['shape']:12s} "
+                  f"{roof['compute_s']*1e3:10.2f} {roof['memory_s']*1e3:10.2f} "
+                  f"{roof['collective_s']*1e3:9.2f} {roof['bottleneck']:>10s} "
+                  f"{roof['useful_ratio']:7.3f} "
+                  f"{rec['memory'].get('total_gb', float('nan')):7.2f}")
+        rows.append((f"roofline_{rec['arch']}_{rec['shape']}",
+                     roof["step_time_s"] * 1e6,
+                     f"us/step {roof['bottleneck']}-bound useful={roof['useful_ratio']:.2f}"))
+    if verbose:
+        n_multi = len(load_records("pod2x16x16"))
+        print(f"  multi-pod (2x16x16) compiled pairs: {n_multi}")
+    return rows, {}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure (+ beyond-paper).
+
+Prints ``name,us_per_call,derived`` CSV at the end, as well as each
+bench's human-readable report.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (aes_function, coldstart, fig5_latency, fig6_load,
+                        model_endpoints, multitenant, polling_efficiency,
+                        roofline_table)
+
+BENCHES = [
+    ("fig5_latency", fig5_latency),
+    ("fig6_load", fig6_load),
+    ("coldstart", coldstart),
+    ("polling_efficiency", polling_efficiency),
+    ("multitenant", multitenant),
+    ("aes_function", aes_function),
+    ("model_endpoints", model_endpoints),
+    ("roofline_table", roofline_table),
+]
+
+
+def main() -> None:
+    all_rows = []
+    for name, mod in BENCHES:
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            rows, _ = mod.run(verbose=True)
+            all_rows.extend(rows)
+        except Exception as e:
+            print(f"  BENCH FAILED: {e!r}")
+            all_rows.append((f"{name}_FAILED", float("nan"), repr(e)))
+        print(f"  [{time.time() - t0:.1f}s]")
+    print("\nname,us_per_call,derived")
+    for name, us, derived in all_rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: production-grade JAX reproduction of "Junctiond: Extending FaaS
+Runtimes with Kernel-Bypass" (CS.DC 2024) — a kernel-bypass FaaS serving
+runtime adapted to TPU model serving, with 10 assigned architectures,
+multi-pod GSPMD distribution, and Pallas TPU kernels."""
+__version__ = "1.0.0"

@@ -1,0 +1,89 @@
+"""Parse collective ops (+ their traffic) out of post-SPMD compiled HLO.
+
+``compiled.as_text()`` exposes the partitioned module; we sum the bytes
+each collective moves per chip:
+
+  all-gather       : out_bytes * (n-1)/n
+  reduce-scatter   : in_bytes  * (n-1)/n
+  all-reduce       : 2 * bytes * (n-1)/n     (ring = RS + AG)
+  all-to-all       : bytes * (n-1)/n
+  collective-permute: bytes
+
+CAVEAT (documented in EXPERIMENTS.md): collectives inside a `while` body
+appear once in the text; the roofline module therefore derives per-layer
+traffic from *unrolled small-L probe lowerings* and extrapolates linearly
+in layer count, rather than trusting a single full-model parse.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g.:  %ag = bf16[2,128]{1,0} all-gather(...), replica_groups={{0,1},...}
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce(?!-)|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_per_chip: float
+    by_kind: Dict[str, float]
+
+    def total(self) -> float:
+        return self.bytes_per_chip
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = defaultdict(int)
+    by_kind: Dict[str, float] = defaultdict(float)
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if kind.endswith("-done"):
+            continue  # paired with -start
+        b = _shape_bytes(shape_str)
+        gm = _GROUPS_RE.search(line)
+        n = len(gm.group(1).split(",")) if gm else 2
+        n = max(2, n)
+        frac = (n - 1) / n
+        if kind == "all-reduce":
+            eff = 2.0 * b * frac
+        elif kind == "collective-permute":
+            eff = float(b)
+        else:
+            eff = b * frac
+        counts[kind] += 1
+        by_kind[kind] += eff
+        total += eff
+    return CollectiveStats(dict(counts), total, dict(by_kind))

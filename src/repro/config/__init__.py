@@ -1,0 +1,15 @@
+from repro.config.arch import (ArchConfig, ArchType, BlockKind, EncDecConfig,
+                               FrontendStub, MambaConfig, MoEConfig,
+                               RWKVConfig, reduced)
+from repro.config.registry import get_arch, list_archs, register
+from repro.config.shapes import (ALL_SHAPES, DECODE_32K, LONG_500K,
+                                 PREFILL_32K, SHAPES, TRAIN_4K, InputShape,
+                                 StepKind, get_shape)
+
+__all__ = [
+    "ArchConfig", "ArchType", "BlockKind", "EncDecConfig", "FrontendStub",
+    "MambaConfig", "MoEConfig", "RWKVConfig", "reduced",
+    "get_arch", "list_archs", "register",
+    "ALL_SHAPES", "SHAPES", "InputShape", "StepKind", "get_shape",
+    "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+]

@@ -1,0 +1,19 @@
+"""Assigned-architecture configs.  Importing this package registers every
+``--arch`` id in :mod:`repro.config.registry`."""
+from repro.configs import (deepseek_67b, h2o_danube3_4b, jamba_v01,  # noqa: F401
+                           mixtral_8x7b, paper_aes, phi35_moe, phi4_mini,
+                           pixtral_12b, qwen3_1p7b, rwkv6_1p6b,
+                           seamless_m4t_v2)
+
+ASSIGNED = [
+    "mixtral-8x7b",
+    "phi3.5-moe-42b-a6.6b",
+    "h2o-danube-3-4b",
+    "qwen3-1.7b",
+    "seamless-m4t-large-v2",
+    "deepseek-67b",
+    "phi4-mini-3.8b",
+    "pixtral-12b",
+    "jamba-v0.1-52b",
+    "rwkv6-1.6b",
+]

@@ -1,0 +1,13 @@
+"""The paper's own benchmark function: AES encryption of a 600-byte input
+(vSwarm [23,24]), deployed as a junctiond FaaS function.  On TPU this is a
+real Pallas AES-128-CTR kernel (repro.kernels.aes_ctr)."""
+from repro.config import ArchConfig, ArchType, register
+
+
+@register("paper-aes-600b")
+def paper_aes() -> ArchConfig:
+    return ArchConfig(
+        name="paper-aes-600b",
+        arch_type=ArchType.MICRO,
+        citation="[vSwarm, arXiv this-paper §5]",
+    )

@@ -1,0 +1,25 @@
+# The paper's primary contribution: junctiond — kernel-bypass execution
+# backend for faasd — modelled as a composable system: a deterministic
+# discrete-event runtime hosting the faasd components (gateway, provider),
+# the two network datapaths (kernel vs Junction), the centralized polling
+# scheduler, and the junctiond/containerd managers.
+from repro.core.autoscaler import Autoscaler, ScalePolicy
+from repro.core.containerd import Containerd
+from repro.core.faas import FaasdRuntime, FunctionSpec, InvocationRecord
+from repro.core.junction import JunctionInstance, UProc
+from repro.core.junctiond import Junctiond
+from repro.core.netstack import NetStack
+from repro.core.resources import CorePool
+from repro.core.scheduler import JunctionScheduler, PollingModel
+from repro.core.simulator import Event, Process, Queue, Simulator
+from repro.core.workload import (LatencySummary, run_open_loop,
+                                 run_sequential, sustainable_throughput)
+
+__all__ = [
+    "Autoscaler", "ScalePolicy",
+    "Containerd", "FaasdRuntime", "FunctionSpec", "InvocationRecord",
+    "JunctionInstance", "UProc", "Junctiond", "NetStack", "CorePool",
+    "JunctionScheduler", "PollingModel", "Event", "Process", "Queue",
+    "Simulator", "LatencySummary", "run_open_loop", "run_sequential",
+    "sustainable_throughput",
+]

@@ -1,0 +1,70 @@
+"""Controller-side autoscaling (paper §2.1: "outside of the critical path,
+the controller performs autoscaling for both the pool and the function
+instances").
+
+Queue-depth + utilisation driven: the controller samples each function's
+in-flight count on a control period and scales the replica count (uProcs
+inside a Junction instance, or containers) within [min, max].  Scale-up
+latency is the backend's (3.4 ms junction / 450 ms containerd) — the
+asymmetry the paper's cold-start section is about.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.core.faas import FaasdRuntime
+from repro.core.simulator import Simulator
+
+
+@dataclasses.dataclass
+class ScalePolicy:
+    min_replicas: int = 1
+    max_replicas: int = 16
+    target_inflight_per_replica: float = 4.0
+    period_s: float = 0.25
+    scale_down_hysteresis: float = 0.5   # scale down below target*this
+
+
+class Autoscaler:
+    def __init__(self, sim: Simulator, runtime: FaasdRuntime,
+                 policy: ScalePolicy = ScalePolicy()):
+        self.sim = sim
+        self.runtime = runtime
+        self.policy = policy
+        self.inflight: Dict[str, int] = {}
+        self.replicas: Dict[str, int] = {}
+        self.scale_events: List[tuple] = []
+
+    def on_arrival(self, fn: str) -> None:
+        self.inflight[fn] = self.inflight.get(fn, 0) + 1
+
+    def on_done(self, fn: str) -> None:
+        self.inflight[fn] = max(0, self.inflight.get(fn, 0) - 1)
+
+    def _desired(self, fn: str) -> int:
+        p = self.policy
+        cur = self.replicas.get(fn, 1)
+        load = self.inflight.get(fn, 0)
+        if load > p.target_inflight_per_replica * cur:
+            want = min(p.max_replicas, cur * 2)
+        elif (load < p.target_inflight_per_replica * cur
+              * p.scale_down_hysteresis and cur > p.min_replicas):
+            want = max(p.min_replicas, cur // 2)
+        else:
+            want = cur
+        return want
+
+    def run(self):
+        def loop():
+            while True:
+                yield self.sim.timeout(self.policy.period_s)
+                for fn in list(self.runtime.functions):
+                    cur = self.replicas.setdefault(fn, 1)
+                    want = self._desired(fn)
+                    if want != cur:
+                        # off the critical path: kicked as its own process
+                        self.sim.process(self.runtime.manager.scale(fn, want))
+                        self.replicas[fn] = want
+                        self.scale_events.append((self.sim.now, fn, cur, want))
+        return self.sim.process(loop())

@@ -1,0 +1,187 @@
+"""faasd runtime model: gateway → provider → function instance (paper §2.1.1).
+
+Every invocation traverses the gateway and the provider before reaching
+the sandbox running the function (3 gRPC legs, responses flowing back the
+same path).  Both orchestration services run either as containers on the
+kernel stack (baseline) or inside Junction instances on the bypass stack
+(junctiond mode, paper §3 — "Junction instances host not only the function
+code but also the services in the FaaS runtime").
+
+The provider optionally caches function metadata (replica count, IP,
+port), keeping containerd/junctiond off the warm critical path (paper §4;
+applied to BOTH backends for a fair comparison, as in the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Generator, List, Optional, Union
+
+from repro.core.containerd import Containerd
+from repro.core.junction import JunctionInstance
+from repro.core.latency import (AES_600B_WORK_US, JUNCTION_RUNTIME,
+                                JUNCTION_STACK, KERNEL_RUNTIME, KERNEL_STACK,
+                                RuntimeCosts)
+from repro.core.netstack import NetStack
+from repro.core.resources import CorePool
+from repro.core.scheduler import JunctionScheduler, PollingModel
+from repro.core.simulator import Simulator
+from repro.core.junctiond import Junctiond
+
+
+@dataclasses.dataclass
+class FunctionSpec:
+    """A deployable FaaS function."""
+    name: str
+    work_us: Union[float, Callable[[], float]] = AES_600B_WORK_US
+    payload_bytes: int = 600
+    response_bytes: int = 628          # input + AES-CTR overhead
+    scale: int = 1
+    max_cores: int = 2
+
+    def work_seconds(self) -> float:
+        w = self.work_us() if callable(self.work_us) else self.work_us
+        return w * 1e-6
+
+
+@dataclasses.dataclass
+class InvocationRecord:
+    fn: str
+    t_arrival: float
+    t_start_exec: float = 0.0
+    t_end_exec: float = 0.0
+    t_done: float = 0.0
+    cold: bool = False
+
+    @property
+    def e2e(self) -> float:
+        return self.t_done - self.t_arrival
+
+    @property
+    def exec_latency(self) -> float:
+        return self.t_end_exec - self.t_start_exec
+
+
+class FaasdRuntime:
+    """One worker node running the full faasd stack."""
+
+    def __init__(self, sim: Simulator, *, backend: str = "junctiond",
+                 n_cores: int = 10, provider_cache: bool = True,
+                 polling_model: PollingModel = PollingModel.CENTRALIZED):
+        self.sim = sim
+        self.backend_name = backend
+        self.provider_cache = provider_cache
+        if backend == "junctiond":
+            self.runtime: RuntimeCosts = JUNCTION_RUNTIME
+            self.cores = CorePool(sim, n_cores, self.runtime)
+            self.scheduler = JunctionScheduler(sim, self.cores, polling_model)
+            self.scheduler.run()
+            self.stack = NetStack(sim, JUNCTION_STACK, self.cores)
+            self.manager = Junctiond(sim, self.scheduler)
+            # the runtime services themselves live in Junction instances
+            self._svc_gateway = JunctionInstance(sim, "svc/gateway", max_cores=4)
+            self._svc_provider = JunctionInstance(sim, "svc/provider", max_cores=4)
+            self._svc_gateway.ready = self._svc_provider.ready = True
+            self.scheduler.register(self._svc_gateway)
+            self.scheduler.register(self._svc_provider)
+        elif backend == "containerd":
+            self.runtime = KERNEL_RUNTIME
+            self.cores = CorePool(sim, n_cores, self.runtime)
+            self.scheduler = None
+            self.stack = NetStack(sim, KERNEL_STACK, self.cores)
+            self.manager = Containerd(sim)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        self.functions: Dict[str, FunctionSpec] = {}
+        self._cache: Dict[str, object] = {}
+        self.records: List[InvocationRecord] = []
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.rejected = 0
+
+    # -- deployment -------------------------------------------------------
+    def deploy(self, spec: FunctionSpec) -> Generator:
+        self.functions[spec.name] = spec
+        yield from self.manager.deploy(spec.name, scale=spec.scale,
+                                       max_cores=spec.max_cores)
+        if self.provider_cache:
+            self._cache[spec.name] = self.manager.lookup(spec.name)
+
+    def deploy_blocking(self, spec: FunctionSpec) -> None:
+        p = self.sim.process(self.deploy(spec))
+        p.completion.callbacks.append(lambda _v: self.sim.stop())
+        self.sim.run()
+        assert p.done
+
+    # -- helpers ------------------------------------------------------
+    def _app(self, base_us: float) -> Generator:
+        """Application processing: critical-path CPU with jitter, plus
+        off-critical-path CPU (GC/softirq/bookkeeping) consumed
+        asynchronously — it caps throughput without adding latency at low
+        load."""
+        t = self.sim.lognormal_us(base_us, self.runtime.app_jitter_sigma)
+        yield from self.cores.consume(t)
+        extra = t * (self.runtime.offpath_cpu_mult - 1.0)
+        if extra > 0:
+            self.sim.process(self.cores.consume(extra))
+
+    def _exec_function(self, spec: FunctionSpec) -> Generator:
+        """The function body: compute + OS interactions (+ tail hiccups)."""
+        r = self.runtime
+        work = spec.work_seconds()
+        overhead = self.sim.lognormal_us(r.exec_syscall_overhead_us,
+                                         r.app_jitter_sigma)
+        hic = 0.0
+        if self.sim.rng.random() < r.exec_hiccup_p:
+            hic = float(self.sim.rng.uniform(r.exec_hiccup_lo_ms,
+                                             r.exec_hiccup_hi_ms)) * 1e-3
+        yield from self.cores.consume(work + overhead)
+        if hic:
+            yield self.sim.timeout(hic)
+
+    def _resolve(self, fn_name: str) -> Generator:
+        """Provider resolving the function endpoint: cache or backend query."""
+        if self.provider_cache and fn_name in self._cache:
+            self.cache_hits += 1
+            return self._cache[fn_name]
+        self.cache_misses += 1
+        rec = yield from self.manager.query(fn_name)
+        if self.provider_cache:
+            self._cache[fn_name] = rec
+        return rec
+
+    # -- the invocation path (measured from the gateway, as in Fig 5) ------
+    def invoke(self, fn_name: str) -> Generator:
+        """Process: one warm invocation; returns the InvocationRecord."""
+        spec = self.functions[fn_name]
+        r = self.runtime
+        rec = InvocationRecord(fn=fn_name, t_arrival=self.sim.now)
+        # 1. gateway: auth + route + proxy
+        yield from self._app(r.gateway_us)
+        # 2. gw -> provider (gRPC leg 1)
+        yield from self.stack.deliver(spec.payload_bytes + 220)
+        # 3. provider: resolve endpoint (+ proxy)
+        yield from self._resolve(fn_name)
+        yield from self._app(r.provider_us)
+        # 4. provider -> function instance (gRPC leg 2)
+        yield from self.stack.deliver(spec.payload_bytes + 180)
+        # 5. in-instance watchdog dispatch
+        yield from self._app(r.watchdog_us)
+        # 6. function execution
+        rec.t_start_exec = self.sim.now
+        yield from self._exec_function(spec)
+        rec.t_end_exec = self.sim.now
+        # 7. response: fn -> provider -> gateway (reverse proxying)
+        yield from self.stack.deliver(spec.response_bytes + 120)
+        yield from self._app(r.provider_us * 0.35)
+        yield from self.stack.deliver(spec.response_bytes + 120)
+        yield from self._app(r.gateway_us * 0.35)
+        rec.t_done = self.sim.now
+        self.records.append(rec)
+        return rec
+
+    # -- metrics ----------------------------------------------------------
+    def latencies_ms(self) -> List[float]:
+        return [r.e2e * 1e3 for r in self.records]
+
+    def exec_latencies_ms(self) -> List[float]:
+        return [r.exec_latency * 1e3 for r in self.records]

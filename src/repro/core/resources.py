@@ -1,0 +1,63 @@
+"""Host CPU core pool with a scheduling-thrash model.
+
+``consume`` acquires one core for ``cpu_time`` seconds (FIFO).  The
+effective occupancy is scaled by a thrash multiplier that grows with the
+runnable backlog — modelling cache pollution, migrations and context
+switching of kernel CFS under load (cf. Caladan).  Junction's
+run-to-completion scheduling sets a near-1 cap.
+"""
+from __future__ import annotations
+
+from typing import Generator, Optional
+
+from repro.core.latency import RuntimeCosts
+from repro.core.simulator import Event, Simulator
+
+
+class CorePool:
+    def __init__(self, sim: Simulator, n_cores: int, runtime: RuntimeCosts):
+        self.sim = sim
+        self.n_cores = n_cores
+        self.runtime = runtime
+        self.busy = 0
+        self._waiters: list = []
+        # accounting
+        self.busy_time = 0.0
+        self.served = 0
+
+    # -- inspection ------------------------------------------------------
+    @property
+    def backlog(self) -> int:
+        return len(self._waiters)
+
+    def thrash(self) -> float:
+        r = self.runtime
+        x = self.backlog / max(1, self.n_cores)
+        return min(r.thrash_cap, 1.0 + r.thrash_coeff * x)
+
+    def utilization(self, horizon: float) -> float:
+        return self.busy_time / (horizon * self.n_cores) if horizon > 0 else 0.0
+
+    # -- usage -------------------------------------------------------
+    def consume(self, cpu_time: float) -> Generator:
+        """Process-style: yield from pool.consume(t)."""
+        ev: Optional[Event] = None
+        if self.busy >= self.n_cores:
+            ev = self.sim.event()
+            self._waiters.append(ev)
+            yield ev
+        self.busy += 1
+        eff = cpu_time * self.thrash()
+        yield self.sim.timeout(eff)
+        self.busy -= 1
+        self.busy_time += eff
+        self.served += 1
+        if self._waiters and self.busy < self.n_cores:
+            self._waiters.pop(0).succeed()
+
+    def remove_cores(self, n: int) -> None:
+        """Dedicate cores elsewhere (e.g. per-instance polling)."""
+        self.n_cores = max(0, self.n_cores - n)
+
+    def add_cores(self, n: int) -> None:
+        self.n_cores += n

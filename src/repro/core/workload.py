@@ -1,0 +1,117 @@
+"""Workload generators + metric helpers for the evaluation (paper §5)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.faas import FaasdRuntime, FunctionSpec
+from repro.core.simulator import Simulator
+
+
+def percentile(xs: List[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs), p))
+
+
+@dataclasses.dataclass
+class LatencySummary:
+    n: int
+    median_ms: float
+    p99_ms: float
+    mean_ms: float
+    p999_ms: float
+
+    @staticmethod
+    def of(latencies_ms: List[float]) -> "LatencySummary":
+        return LatencySummary(
+            n=len(latencies_ms),
+            median_ms=percentile(latencies_ms, 50),
+            p99_ms=percentile(latencies_ms, 99),
+            mean_ms=float(np.mean(latencies_ms)) if latencies_ms else float("nan"),
+            p999_ms=percentile(latencies_ms, 99.9),
+        )
+
+
+def run_sequential(runtime: FaasdRuntime, fn_name: str, n: int = 100,
+                   think_time_s: float = 0.0) -> LatencySummary:
+    """Fig 5 methodology: n *sequential* invocations (closed loop)."""
+    sim = runtime.sim
+
+    def client():
+        for _ in range(n):
+            yield from runtime.invoke(fn_name)
+            if think_time_s:
+                yield sim.timeout(think_time_s)
+
+    start = len(runtime.records)
+    p = sim.process(client())
+    p.completion.callbacks.append(lambda _v: sim.stop())
+    sim.run()
+    assert p.done, "sequential client did not finish"
+    return LatencySummary.of([r.e2e * 1e3 for r in runtime.records[start:]])
+
+
+def run_open_loop(runtime: FaasdRuntime, fn_name: str, rate_rps: float,
+                  duration_s: float = 2.0, warmup_s: float = 0.3,
+                  max_outstanding: int = 20000) -> Dict[str, float]:
+    """Fig 6 methodology: Poisson open-loop arrivals at an offered rate."""
+    sim = runtime.sim
+    outstanding = [0]
+
+    def arrivals():
+        t_end = sim.now + duration_s
+        while sim.now < t_end:
+            yield sim.timeout(sim.exponential(1.0 / rate_rps))
+            if outstanding[0] >= max_outstanding:
+                runtime.rejected += 1
+                continue
+            outstanding[0] += 1
+
+            def one():
+                yield from runtime.invoke(fn_name)
+                outstanding[0] -= 1
+
+            sim.process(one())
+
+    start_idx = len(runtime.records)
+    t0 = sim.now
+    sim.process(arrivals())
+    sim.run(until=t0 + duration_s + 2.0)  # drain window
+    recs = [r for r in runtime.records[start_idx:]
+            if r.t_arrival >= t0 + warmup_s]
+    lat = [r.e2e * 1e3 for r in recs]
+    done_in_window = [r for r in recs if r.t_done <= t0 + duration_s + 2.0]
+    ach = len(done_in_window) / max(1e-9, duration_s - warmup_s)
+    summary = LatencySummary.of(lat)
+    return {
+        "offered_rps": rate_rps,
+        "achieved_rps": ach,
+        "median_ms": summary.median_ms,
+        "p99_ms": summary.p99_ms,
+        "n": summary.n,
+        "rejected": runtime.rejected,
+    }
+
+
+def sustainable_throughput(backend: str, fn: Optional[FunctionSpec] = None,
+                           slo_p99_ms: float = 50.0, rates=None,
+                           n_cores: int = 10, seed: int = 0) -> Dict[str, object]:
+    """Max offered rate whose P99 stays under the SLO; fresh runtime per
+    rate (open-loop correctness)."""
+    fn = fn or FunctionSpec(name="aes")
+    rates = rates or [250, 500, 1000, 2000, 4000, 8000, 12000, 16000, 20000, 24000]
+    best, curve = 0.0, []
+    for rate in rates:
+        sim = Simulator(seed=seed)
+        rt = FaasdRuntime(sim, backend=backend, n_cores=n_cores)
+        rt.deploy_blocking(fn)
+        res = run_open_loop(rt, fn.name, rate_rps=rate)
+        curve.append(res)
+        ok = (res["p99_ms"] <= slo_p99_ms
+              and res["achieved_rps"] >= 0.85 * rate and res["rejected"] == 0)
+        if ok:
+            best = max(best, rate)
+    return {"sustainable_rps": best, "curve": curve}

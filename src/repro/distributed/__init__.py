@@ -1,0 +1,4 @@
+from repro.distributed import sharding
+from repro.distributed.sharding import Policy
+
+__all__ = ["sharding", "Policy"]

@@ -1,0 +1,229 @@
+"""Sharding policies: parameter / optimizer / activation / cache
+PartitionSpecs per (architecture x input shape x mesh).
+
+A name-based rule engine with divisibility fallbacks: a dimension is only
+sharded when it divides the axis size, otherwise the next candidate (or
+replication) is used — this is what lets one policy cover ten
+architectures (e.g. seamless's vocab 256206 is not 16-divisible, so its
+lm_head falls back to d-sharding).
+
+Baseline policy (the §Perf hillclimb iterates on this):
+* weights: TP over 'model' on the "wide" dim; FSDP over 'data' on the
+  other dim for training;
+* activations between blocks: (dp, None, 'model');
+* KV caches: batch over dp when divisible, sequence over 'model'
+  (sequence-sharded decode — kv_heads=8 < model=16 makes head-sharding
+  impossible for most assigned archs);
+* SSM states: batch over dp, d_inner/heads over 'model'.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ArchConfig, InputShape, StepKind
+from repro.launch.mesh import axis_size, dp_axes
+
+# weight matrices whose LAST dim is the "wide"/output dim -> TP on last
+_COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "cm_wk", "wg", "wr",
+                 "in_proj", "x_proj", "dt_proj_w", "frontend_proj", "lm_head"}
+# matrices whose second-to-last dim is the contracted/wide dim -> TP on -2
+_ROW_PARALLEL = {"wo", "w_down", "cm_wv", "out_proj"}
+# per-channel vectors over d_inner / heads
+_DI_VECTORS = {"conv_b", "D", "dt_proj_b"}
+
+
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Tunable knobs — §Perf hillclimbing flips these."""
+    fsdp: bool = True                 # shard weights over dp for training
+    act_model_sharded: bool = True    # activations d-sharded between blocks
+    seq_sharded_cache: bool = True    # KV seq over 'model' (vs replicated)
+    vocab_sharded_logits: bool = True
+    chunked_attention: bool = False   # flash-style XLA attention (SSPerf)
+    moe_expert_parallel: bool = False # shard the expert dim over 'model'
+    select_cache_update: bool = False # iota-select KV write (SPMD-friendly)
+    attn_mixed_precision: bool = False # bf16 dots, f32 accum (MXU-native)
+    shard_moe_dispatch: bool = False  # constrain (E,C,d) dispatch over dp
+    moe_local_dispatch: bool = False  # per-data-shard routing (production)
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, *, training: bool,
+                policy: Policy = Policy()):
+    """PartitionSpec pytree matching transformer.init_params(cfg)."""
+    from repro.models import transformer as T
+    shapes = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    model_n = axis_size(mesh, "model")
+    dp = dp_axes(mesh)
+    dp_n = axis_size(mesh, dp)
+    use_fsdp = policy.fsdp and training
+
+    def base_rule(name: str, shape: Tuple[int, ...]) -> list:
+        """Spec for the *unstacked* trailing dims of a leaf."""
+        nd = len(shape)
+
+        def fs(dim_size):  # fsdp candidate on a dim
+            return dp if (use_fsdp and _divides(dim_size, dp_n)) else None
+
+        if name == "embed":
+            spec = [None, None]
+            if _divides(shape[1], model_n):
+                spec[1] = "model"
+            if use_fsdp and _divides(shape[0], dp_n):
+                spec[0] = dp
+            return spec
+        if name == "lm_head":
+            if policy.vocab_sharded_logits and _divides(shape[-1], model_n):
+                return [fs(shape[0]), "model"]
+            if _divides(shape[0], model_n):
+                return ["model", fs(shape[1])]
+            return [None, None]
+        if name == "A_log":      # (di, ds)
+            return ["model" if _divides(shape[0], model_n) else None, None]
+        if name in _DI_VECTORS:  # (di,)
+            return ["model" if _divides(shape[-1], model_n) else None]
+        if name == "conv_w":     # (d_conv, di)
+            return [None, "model" if _divides(shape[-1], model_n) else None]
+        if name == "bonus_u":    # (H, hd)
+            return ["model" if _divides(shape[0], model_n) else None, None]
+        if name == "router":
+            return [None] * nd
+        if name in _COL_PARALLEL:
+            spec = [None] * nd
+            if _divides(shape[-1], model_n):
+                spec[-1] = "model"
+                if use_fsdp and _divides(shape[-2], dp_n):
+                    spec[-2] = dp
+            elif _divides(shape[-2], model_n):
+                spec[-2] = "model"
+            return spec
+        if name in _ROW_PARALLEL:
+            spec = [None] * nd
+            if _divides(shape[-2], model_n):
+                spec[-2] = "model"
+                if use_fsdp and _divides(shape[-1], dp_n):
+                    spec[-1] = dp
+            return spec
+        # norms, mu_*, decay_base, ln_x, scalars: replicate
+        return [None] * nd
+
+    def rule(path, leaf) -> P:
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = names[-1]
+        # block params are stacked over the scan (group) dim — never sharded
+        stacked = any(n in ("blocks", "enc_blocks") for n in names)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        # expert parallelism: shard the expert dim instead of TP-on-f
+        if (policy.moe_expert_parallel and "moe" in names
+                and name in ("w_gate", "w_up", "w_down")
+                and shape and _divides(shape[0], model_n)):
+            spec = ["model"] + [None] * (len(shape) - 1)
+        else:
+            spec = base_rule(name, shape) if shape else []
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = [rule(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def act_spec(cfg: ArchConfig, mesh: Mesh, batch: int,
+             policy: Policy = Policy()) -> Optional[P]:
+    """Between-block activation sharding (B, S, d)."""
+    model_n = axis_size(mesh, "model")
+    dp = dp_axes(mesh)
+    dp_n = axis_size(mesh, dp)
+    b = dp if _divides(batch, dp_n) else None
+    d = "model" if (policy.act_model_sharded and _divides(cfg.d_model, model_n)) else None
+    return P(b, None, d)
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape, mesh: Mesh) -> dict:
+    """PartitionSpecs for the input batch dict (matches input_specs)."""
+    dp = dp_axes(mesh)
+    dp_n = axis_size(mesh, dp)
+    b = dp if _divides(shape.global_batch, dp_n) else None
+    specs = {}
+    if cfg.frontend is not None and cfg.encdec is None:
+        specs["embeds"] = P(b, None, None)
+    else:
+        specs["tokens"] = P(b, None)
+    if cfg.encdec is not None:
+        specs["enc_embeds"] = P(b, None, None)
+    if shape.step == StepKind.TRAIN:
+        specs["labels"] = P(b, None)
+    return specs
+
+
+def _dp_list(dp) -> list:
+    return [dp] if isinstance(dp, str) else list(dp)
+
+
+def cache_specs_for(tree, cfg: ArchConfig, mesh: Mesh, batch: int,
+                    policy: Policy = Policy()):
+    """PartitionSpec pytree for a cache pytree (the eval_shape of
+    ``prefill``'s cache output: {'layers': ..., 'cross_kv': ...}).
+    Cache leaves carry a leading n_groups scan dim (never sharded)."""
+    model_n = axis_size(mesh, "model")
+    dp = dp_axes(mesh)
+    dp_n = axis_size(mesh, dp)
+    b = dp if _divides(batch, dp_n) else None
+
+    def seq_spec(cap: int):
+        """Axes for the sequence dim: dp lands here when the batch can't
+        absorb it (long-context batch=1), plus 'model' when enabled."""
+        axes = []
+        if b is None:
+            axes.extend(_dp_list(dp))
+        if policy.seq_sharded_cache:
+            axes.append("model")
+        while axes:
+            n = 1
+            for a in axes:
+                n *= axis_size(mesh, a)
+            if _divides(cap, n):
+                break
+            axes.pop()            # drop minor axes until it divides
+        if not axes:
+            return None
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+    def rule(path, leaf) -> P:
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = names[-1]
+        shape = leaf.shape
+        if "cross_kv" in names:   # (g, B, T, Hkv, hd)
+            return P(None, b, seq_spec(shape[2]), None, None)
+        if name == "enc_mask":
+            return P(b, None)
+        if name in ("k", "v"):    # (g, B, cap, Hkv, hd)
+            return P(None, b, seq_spec(shape[2]), None, None)
+        if name == "h":           # mamba (g, B, di, ds)
+            return P(None, b, "model" if _divides(shape[2], model_n) else None, None)
+        if name == "conv":        # (g, B, dconv-1, di)
+            return P(None, b, None, "model" if _divides(shape[3], model_n) else None)
+        if name == "wkv":         # (g, B, H, hd, hd)
+            return P(None, b, "model" if _divides(shape[2], model_n) else None, None, None)
+        if name in ("shift_tm", "shift_cm"):   # (g, B, 1, d)
+            return P(None, b, None, "model" if _divides(shape[3], model_n) else None)
+        return P(*([None] * len(shape)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return jax.tree_util.tree_unflatten(treedef, [rule(p, l) for p, l in flat])
+
+
+def named(mesh: Mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))

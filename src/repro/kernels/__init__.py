@@ -1,0 +1,6 @@
+from repro.kernels import ops, ref
+from repro.kernels.ops import (aes_ctr, decode_attention, flash_attention,
+                               mamba_scan, moe_gmm, rwkv6_scan)
+
+__all__ = ["ops", "ref", "aes_ctr", "decode_attention", "flash_attention",
+           "mamba_scan", "moe_gmm", "rwkv6_scan"]

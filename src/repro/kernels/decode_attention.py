@@ -1,0 +1,95 @@
+"""GQA decode attention Pallas TPU kernel: ONE query token per sequence
+against a long KV cache (the serve_step hot loop).
+
+All G query heads of one KV head are processed together (an (G, d) x
+(d, bk) MXU matmul per KV block), with online softmax carried in VMEM
+scratch across the sequential KV-block grid dimension.  Masking comes
+from a per-(batch) valid-length vector (ring-buffer slots may be invalid
+early on).
+
+Layouts: q (B, Hq, d); k/v (B, T, Hkv, d); valid (B, T) int32 -> (B, Hq, d).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float):
+    jk = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (bk, d)
+    v = v_ref[0, :, 0].astype(jnp.float32)       # (bk, d)
+    valid = valid_ref[0] != 0                    # (bk,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G, bk)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finish():
+        l = jnp.where(l_scr[...] == 0.0, 1.0, l_scr[...])
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     valid: jnp.ndarray, *, block_k: int = 512,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, d); k/v: (B, T, Hkv, d); valid: (B, T) bool/int."""
+    B, Hq, d = q.shape
+    _, T, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = d ** -0.5
+    bk = min(block_k, T)
+    pad = (-T) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        valid = jnp.pad(valid.astype(jnp.int32), ((0, 0), (0, pad)))
+    Tp = T + pad
+    qg = q.reshape(B, Hkv, G, d)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=(B, Hkv, Tp // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, d), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, valid.astype(jnp.int32))
+    return out.reshape(B, Hq, d)

@@ -1,0 +1,85 @@
+"""Mamba selective-scan Pallas TPU kernel.
+
+TPU adaptation of the CUDA selective-scan: instead of one thread-block per
+(batch, channel-chunk) with warp shuffles, the grid walks
+(batch, d_inner-block, seq-block) with the seq-block dimension minor and
+sequential, carrying the (bd, ds) SSM state in VMEM scratch across
+sequence blocks.  Inside a block a ``fori_loop`` steps time; every state
+update is a (bd, ds) vector op on the VPU — the state never leaves VMEM,
+which is the whole point (the CUDA version keeps it in registers).
+
+Inputs: dt, dtx (B, S, di); Bm, Cm (B, S, ds); A (di, ds).
+Outputs: y (B, S, di), h_last (B, di, ds).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(dt_ref, dtx_ref, B_ref, C_ref, A_ref, y_ref, h_ref, h_scr,
+                 *, block_s: int):
+    js = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(js == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    A = A_ref[...].astype(jnp.float32)            # (bd, ds)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t].astype(jnp.float32)   # (bd,)
+        dtx_t = dtx_ref[0, t].astype(jnp.float32)
+        B_t = B_ref[0, t].astype(jnp.float32)     # (ds,)
+        C_t = C_ref[0, t].astype(jnp.float32)
+        a = jnp.exp(dt_t[:, None] * A)            # (bd, ds)
+        b = dtx_t[:, None] * B_t[None, :]
+        h = a * h + b
+        y_ref[0, t] = jnp.sum(h * C_t[None, :], axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(js == ns - 1)
+    def _finish():
+        h_ref[0] = h.astype(h_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_s", "interpret"))
+def mamba_scan(dt: jnp.ndarray, dtx: jnp.ndarray, Bm: jnp.ndarray,
+               Cm: jnp.ndarray, A: jnp.ndarray, *, block_d: int = 256,
+               block_s: int = 256, interpret: bool = False):
+    B, S, di = dt.shape
+    ds = Bm.shape[-1]
+    bd = min(block_d, di)
+    bs = min(block_s, S)
+    assert di % bd == 0 and S % bs == 0, (di, bd, S, bs)
+
+    y, h_last = pl.pallas_call(
+        functools.partial(_scan_kernel, block_s=bs),
+        grid=(B, di // bd, S // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b, i, j: (b, j, i)),
+            pl.BlockSpec((1, bs, bd), lambda b, i, j: (b, j, i)),
+            pl.BlockSpec((1, bs, ds), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bs, ds), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((bd, ds), lambda b, i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b, i, j: (b, j, i)),
+            pl.BlockSpec((1, bd, ds), lambda b, i, j: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), dt.dtype),
+            jax.ShapeDtypeStruct((B, di, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, ds), jnp.float32)],
+        interpret=interpret,
+    )(dt, dtx, Bm, Cm, A)
+    return y, h_last

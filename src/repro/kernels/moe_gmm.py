@@ -1,0 +1,64 @@
+"""MoE grouped (expert-batched) matmul Pallas TPU kernel.
+
+Computes y[e] = x[e] @ w[e] for every expert — the FFN inner loop of the
+capacity-based MoE dispatch.  Classic MXU tiling: grid
+(E, C/bc, F/bf, D/bd) with the contraction (D) dimension minor and
+sequential, accumulating in fp32 VMEM scratch.
+
+x: (E, C, D); w: (E, D, F) -> y: (E, C, F).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, y_ref, acc_scr):
+    kd = pl.program_id(3)
+    nd = pl.num_programs(3)
+
+    @pl.when(kd == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kd == nd - 1)
+    def _finish():
+        y_ref[0] = acc_scr[...].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
+                                             "interpret"))
+def moe_gmm(x: jnp.ndarray, w: jnp.ndarray, *, block_c: int = 128,
+            block_f: int = 128, block_d: int = 512,
+            interpret: bool = False) -> jnp.ndarray:
+    E, C, D = x.shape
+    _, _, F = w.shape
+    bc, bf, bd = min(block_c, C), min(block_f, F), min(block_d, D)
+    pc, pf, pd = (-C) % bc, (-F) % bf, (-D) % bd
+    if pc or pd:
+        x = jnp.pad(x, ((0, 0), (0, pc), (0, pd)))
+    if pd or pf:
+        w = jnp.pad(w, ((0, 0), (0, pd), (0, pf)))
+    Cp, Fp, Dp = C + pc, F + pf, D + pd
+
+    y = pl.pallas_call(
+        _gmm_kernel,
+        grid=(E, Cp // bc, Fp // bf, Dp // bd),
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bd, bf), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, Fp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return y[:, :C, :F]

@@ -1,0 +1,213 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (prefill, causal + optional sliding window, GQA)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, Hq, S, d); k, v: (B, Hkv, T, d) -> (B, Hq, S, d)."""
+    B, Hq, S, d = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else d ** -0.5
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kp <= qp + (T - S)     # allow prefix cache offset
+    if window is not None:
+        mask &= kp > qp + (T - S) - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA decode attention (one token vs KV cache)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         valid: jnp.ndarray,
+                         scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, Hq, d); k, v: (B, T, Hkv, d); valid: (B, T) bool -> (B, Hq, d)."""
+    B, Hq, d = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(B, Hkv, G, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba selective scan
+
+
+def mamba_scan_ref(dt: jnp.ndarray, dtx: jnp.ndarray, Bm: jnp.ndarray,
+                   Cm: jnp.ndarray, A: jnp.ndarray,
+                   h0: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """dt, dtx: (B, S, di); Bm, Cm: (B, S, ds); A: (di, ds).
+    Returns y: (B, S, di), h_T: (B, di, ds)."""
+    Bsz, S, di = dt.shape
+    ds = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, di, ds), jnp.float32)
+
+    def step(h, t):
+        a = jnp.exp(dt[:, t, :, None] * A)
+        b = dtx[:, t, :, None] * Bm[:, t, None, :]
+        h = a * h + b
+        y = jnp.einsum("bde,be->bd", h, Cm[:, t])
+        return h, y
+
+    h_last, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 wkv recurrence
+
+
+def rwkv6_scan_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   w: jnp.ndarray, u: jnp.ndarray,
+                   S0: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,v,w: (B, T, H, hd); u: (H, hd).  Returns o: (B,T,H,hd), S_T."""
+    B, T, H, hd = r.shape
+    if S0 is None:
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(S, t):
+        kv = k[:, t, :, :, None] * v[:, t, :, None, :]        # (B,H,hd,hd)
+        eff = S + u[None, :, :, None] * kv
+        o = jnp.einsum("bhij,bhi->bhj", eff, r[:, t])
+        S = w[:, t, :, :, None] * S + kv
+        return S, o
+
+    S_last, os_ = jax.lax.scan(step, S0, jnp.arange(T))
+    return jnp.moveaxis(os_, 0, 1), S_last
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped matmul
+
+
+def moe_gmm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (E, C, d); w: (E, d, f) -> (E, C, f)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# AES-128-CTR (the paper's benchmark function) — table-based reference
+
+
+def _aes_tables():
+    import numpy as np
+    sbox = np.array([
+        0x63,0x7c,0x77,0x7b,0xf2,0x6b,0x6f,0xc5,0x30,0x01,0x67,0x2b,0xfe,0xd7,0xab,0x76,
+        0xca,0x82,0xc9,0x7d,0xfa,0x59,0x47,0xf0,0xad,0xd4,0xa2,0xaf,0x9c,0xa4,0x72,0xc0,
+        0xb7,0xfd,0x93,0x26,0x36,0x3f,0xf7,0xcc,0x34,0xa5,0xe5,0xf1,0x71,0xd8,0x31,0x15,
+        0x04,0xc7,0x23,0xc3,0x18,0x96,0x05,0x9a,0x07,0x12,0x80,0xe2,0xeb,0x27,0xb2,0x75,
+        0x09,0x83,0x2c,0x1a,0x1b,0x6e,0x5a,0xa0,0x52,0x3b,0xd6,0xb3,0x29,0xe3,0x2f,0x84,
+        0x53,0xd1,0x00,0xed,0x20,0xfc,0xb1,0x5b,0x6a,0xcb,0xbe,0x39,0x4a,0x4c,0x58,0xcf,
+        0xd0,0xef,0xaa,0xfb,0x43,0x4d,0x33,0x85,0x45,0xf9,0x02,0x7f,0x50,0x3c,0x9f,0xa8,
+        0x51,0xa3,0x40,0x8f,0x92,0x9d,0x38,0xf5,0xbc,0xb6,0xda,0x21,0x10,0xff,0xf3,0xd2,
+        0xcd,0x0c,0x13,0xec,0x5f,0x97,0x44,0x17,0xc4,0xa7,0x7e,0x3d,0x64,0x5d,0x19,0x73,
+        0x60,0x81,0x4f,0xdc,0x22,0x2a,0x90,0x88,0x46,0xee,0xb8,0x14,0xde,0x5e,0x0b,0xdb,
+        0xe0,0x32,0x3a,0x0a,0x49,0x06,0x24,0x5c,0xc2,0xd3,0xac,0x62,0x91,0x95,0xe4,0x79,
+        0xe7,0xc8,0x37,0x6d,0x8d,0xd5,0x4e,0xa9,0x6c,0x56,0xf4,0xea,0x65,0x7a,0xae,0x08,
+        0xba,0x78,0x25,0x2e,0x1c,0xa6,0xb4,0xc6,0xe8,0xdd,0x74,0x1f,0x4b,0xbd,0x8b,0x8a,
+        0x70,0x3e,0xb5,0x66,0x48,0x03,0xf6,0x0e,0x61,0x35,0x57,0xb9,0x86,0xc1,0x1d,0x9e,
+        0xe1,0xf8,0x98,0x11,0x69,0xd9,0x8e,0x94,0x9b,0x1e,0x87,0xe9,0xce,0x55,0x28,0xdf,
+        0x8c,0xa1,0x89,0x0d,0xbf,0xe6,0x42,0x68,0x41,0x99,0x2d,0x0f,0xb0,0x54,0xbb,0x16],
+        dtype=np.int32)
+    # GF(2^8) xtime table for MixColumns
+    xt = np.zeros(256, dtype=np.int32)
+    for i in range(256):
+        x = i << 1
+        if x & 0x100:
+            x ^= 0x11b
+        xt[i] = x
+    rcon = np.array([0x01,0x02,0x04,0x08,0x10,0x20,0x40,0x80,0x1b,0x36], np.int32)
+    return jnp.asarray(sbox), jnp.asarray(xt), jnp.asarray(rcon)
+
+
+SBOX, XTIME, RCON = _aes_tables()
+
+
+def aes_key_expand(key_bytes: jnp.ndarray) -> jnp.ndarray:
+    """key: (16,) int32 -> round keys (11, 16) int32."""
+    w = [key_bytes[i * 4:(i + 1) * 4] for i in range(4)]
+    for i in range(4, 44):
+        t = w[i - 1]
+        if i % 4 == 0:
+            t = jnp.roll(t, -1)
+            t = SBOX[t]
+            t = t.at[0].set(t[0] ^ RCON[i // 4 - 1])
+        w.append(w[i - 4] ^ t)
+    rk = jnp.stack(w).reshape(11, 16)
+    return rk
+
+
+def _mix_columns(s: jnp.ndarray) -> jnp.ndarray:
+    """s: (..., 16) column-major AES state bytes."""
+    s = s.reshape(s.shape[:-1] + (4, 4))           # (..., col, row)
+    a0, a1, a2, a3 = s[..., 0], s[..., 1], s[..., 2], s[..., 3]
+    x0, x1, x2, x3 = XTIME[a0], XTIME[a1], XTIME[a2], XTIME[a3]
+    b0 = x0 ^ (a1 ^ x1) ^ a2 ^ a3
+    b1 = a0 ^ x1 ^ (a2 ^ x2) ^ a3
+    b2 = a0 ^ a1 ^ x2 ^ (a3 ^ x3)
+    b3 = (a0 ^ x0) ^ a1 ^ a2 ^ x3
+    return jnp.stack([b0, b1, b2, b3], axis=-1).reshape(s.shape[:-2] + (16,))
+
+
+_SHIFT_ROWS = jnp.asarray([0, 5, 10, 15, 4, 9, 14, 3, 8, 13, 2, 7, 12, 1, 6, 11])
+
+
+def aes_encrypt_block_ref(block: jnp.ndarray, round_keys: jnp.ndarray) -> jnp.ndarray:
+    """block: (..., 16) int32 bytes; round_keys (11, 16)."""
+    s = block ^ round_keys[0]
+    for rnd in range(1, 10):
+        s = SBOX[s]
+        s = s[..., _SHIFT_ROWS]
+        s = _mix_columns(s)
+        s = s ^ round_keys[rnd]
+    s = SBOX[s]
+    s = s[..., _SHIFT_ROWS]
+    return s ^ round_keys[10]
+
+
+def aes_ctr_ref(plaintext: jnp.ndarray, key_bytes: jnp.ndarray,
+                nonce: int = 0) -> jnp.ndarray:
+    """plaintext: (N, 16) int32 byte blocks -> ciphertext (N, 16)."""
+    n = plaintext.shape[0]
+    rk = aes_key_expand(key_bytes)
+    ctr = jnp.arange(n, dtype=jnp.int32) + nonce
+    # counter block: 12 zero bytes then big-endian 32-bit counter
+    shifts = jnp.arange(3, -1, -1, dtype=jnp.int32) * 8
+    ctr_bytes = ((ctr[:, None] >> shifts[None, :]) & 0xFF).astype(jnp.int32)
+    blocks = jnp.concatenate(
+        [jnp.zeros((n, 12), jnp.int32), ctr_bytes], axis=1)
+    keystream = aes_encrypt_block_ref(blocks, rk)
+    return plaintext ^ keystream

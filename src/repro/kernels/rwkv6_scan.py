@@ -1,0 +1,79 @@
+"""RWKV6 wkv-recurrence Pallas TPU kernel.
+
+Grid: (batch, head, seq-block), seq-block minor and sequential; the
+(hd, hd) per-head state matrix lives in VMEM scratch across sequence
+blocks.  Each time step is rank-1 state update + matrix-vector product on
+the VPU; hd=64 keeps the state lane-aligned.
+
+Inputs: r, k, v, w (B, T, H, hd) (w = per-channel decay in (0,1)),
+u (H, hd) bonus.  Outputs: o (B, T, H, hd), S_last (B, H, hd, hd).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, s_scr,
+                *, block_t: int):
+    jt = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(jt == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    u = u_ref[0].astype(jnp.float32)              # (hd,)
+
+    def step(t, S):
+        rt = r_ref[0, t, 0].astype(jnp.float32)   # (hd,)
+        kt = k_ref[0, t, 0].astype(jnp.float32)
+        vt = v_ref[0, t, 0].astype(jnp.float32)
+        wt = w_ref[0, t, 0].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]            # (hd, hd)
+        eff = S + u[:, None] * kv
+        o_ref[0, t, 0] = jnp.sum(eff * rt[:, None], axis=0).astype(o_ref.dtype)
+        return wt[:, None] * S + kv
+
+    S = jax.lax.fori_loop(0, block_t, step, s_scr[...])
+    s_scr[...] = S
+
+    @pl.when(jt == nt - 1)
+    def _finish():
+        s_ref[0, 0] = S.astype(s_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def rwkv6_scan(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               w: jnp.ndarray, u: jnp.ndarray, *, block_t: int = 256,
+               interpret: bool = False):
+    B, T, H, hd = r.shape
+    bt = min(block_t, T)
+    assert T % bt == 0, (T, bt)
+
+    o, s_last = pl.pallas_call(
+        functools.partial(_wkv_kernel, block_t=bt),
+        grid=(B, H, T // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, 1, hd), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bt, 1, hd), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bt, 1, hd), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bt, 1, hd), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, j: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, 1, hd), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, hd), r.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return o, s_last

@@ -1,0 +1,6 @@
+# NOTE: do not import repro.launch.dryrun here — it sets XLA_FLAGS for 512
+# host devices at import time, which must only happen in the dryrun entry
+# point itself.
+from repro.launch import mesh
+
+__all__ = ["mesh"]

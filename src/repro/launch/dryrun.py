@@ -1,0 +1,352 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines, before any jax import: jax locks the
+# device count at first init.  Smoke tests / benches do NOT import this
+# module, so they see the single real CPU device.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.analysis import roofline as rl     # noqa: E402
+from repro.config import (ALL_SHAPES, ArchConfig, StepKind, get_arch,  # noqa: E402
+                          get_shape)
+from repro.configs import ASSIGNED            # noqa: E402
+from repro.distributed import sharding as sh  # noqa: E402
+from repro.launch.mesh import axis_size, dp_axes, make_production_mesh  # noqa: E402
+from repro.models import transformer as T     # noqa: E402
+from repro.models.flops import model_flops    # noqa: E402
+from repro.train.losses import cross_entropy  # noqa: E402
+from repro.train.optimizer import AdamWConfig, apply_updates, init_state  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Config helpers
+
+
+def with_layers(cfg: ArchConfig, n: int) -> ArchConfig:
+    encdec = cfg.encdec
+    if encdec is not None:
+        encdec = dataclasses.replace(encdec, encoder_layers=n)
+    return dataclasses.replace(cfg, n_layers=n, encdec=encdec)
+
+
+def probe_layer_counts(cfg: ArchConfig) -> Tuple[int, int]:
+    """Two unrolled probe depths: one and two stack periods (Jamba's
+    period is 8, homogeneous stacks use 2/4 for a stabler fit)."""
+    (kinds, _), = T._stack_plan(cfg)
+    period = len(kinds)
+    if period == 1:
+        return 2, 4
+    return period, 2 * period
+
+
+def serving_variant(cfg: ArchConfig, shape) -> Tuple[ArchConfig, str]:
+    """long_500k needs sub-quadratic attention: SSM/hybrid/SWA archs run
+    natively; pure full-attention archs get the documented sliding-window
+    serving variant (window 4096)."""
+    if shape.name != "long_500k" or cfg.supports_long_context_natively:
+        return cfg, ""
+    return (dataclasses.replace(cfg, sliding_window=4096),
+            "swa-serving-variant(window=4096)")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+
+
+def input_specs(cfg: ArchConfig, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.step == StepKind.DECODE:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        return batch
+    if cfg.frontend is not None and cfg.encdec is None:     # VLM
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.frontend.embed_dim), dt)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.encdec is not None:                               # audio enc-dec
+        Tenc = cfg.encdec.max_source_positions
+        batch["enc_embeds"] = jax.ShapeDtypeStruct(
+            (B, Tenc, cfg.frontend.embed_dim if cfg.frontend else cfg.d_model), dt)
+    if shape.step == StepKind.TRAIN:
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return batch
+
+
+def cache_template(cfg: ArchConfig, batch: int, seq_len: int):
+    dt = jnp.dtype(cfg.dtype)
+
+    def build():
+        layers = T.init_caches(None, cfg, batch, seq_len)
+        out = {"layers": layers}
+        if cfg.encdec is not None:
+            (kinds, n_groups), = T._stack_plan(cfg)
+            Tenc = cfg.encdec.max_source_positions
+            hd = cfg.resolved_head_dim
+            kv_shape = (n_groups, batch, Tenc, cfg.n_kv_heads, hd)
+            out["cross_kv"] = tuple(
+                (jnp.zeros(kv_shape, dt), jnp.zeros(kv_shape, dt))
+                for _ in kinds)
+        return out
+
+    return jax.eval_shape(build)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+
+
+def build_step(cfg: ArchConfig, shape, mesh, policy: sh.Policy,
+               unroll: bool = False):
+    """Returns (fn, example_args, in_shardings, out_shardings)."""
+    B, S = shape.global_batch, shape.seq_len
+    training = shape.step == StepKind.TRAIN
+    pspecs = sh.param_specs(cfg, mesh, training=training, policy=policy)
+    act = sh.act_spec(cfg, mesh, B, policy)
+    act_shd = NamedSharding(mesh, act)
+    bspecs = sh.batch_specs(cfg, shape, mesh)
+    params_tpl = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+    batch_tpl = input_specs(cfg, shape)
+    dp = dp_axes(mesh)
+    b_ax = dp if shape.global_batch % axis_size(mesh, dp) == 0 else None
+
+    def ns(tree):
+        return sh.named(mesh, tree)
+
+    attn_impl = "chunked" if policy.chunked_attention else "dense"
+    moe_shd = None
+    if policy.shard_moe_dispatch and cfg.moe is not None:
+        moe_shd = NamedSharding(mesh, P(None, dp, "model" if cfg.d_model % axis_size(mesh, "model") == 0 else None))
+    moe_groups = 0
+    moe_gshd = None
+    if policy.moe_local_dispatch and cfg.moe is not None:
+        moe_groups = axis_size(mesh, dp)
+        d_ax = "model" if cfg.d_model % axis_size(mesh, "model") == 0 else None
+        moe_gshd = {
+            "x": NamedSharding(mesh, P(dp, None, d_ax)),
+            "dispatch": NamedSharding(mesh, P(dp, None, None, d_ax)),
+        }
+    if training:
+        opt_cfg = AdamWConfig()
+        opt_tpl = jax.eval_shape(init_state, params_tpl)
+        opt_specs = type(opt_tpl)(step=P(), mu=pspecs, nu=pspecs)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                logits, aux = T.forward(p, cfg, batch, remat=True,
+                                        act_sharding=act_shd, unroll=unroll,
+                                        attn_impl=attn_impl,
+                                        moe_dispatch_sharding=moe_shd,
+                                        moe_local_groups=moe_groups,
+                                        moe_group_sharding=moe_gshd)
+                m = cross_entropy(logits, batch["labels"])
+                return m["loss"] + aux, m["nll"]
+
+            (_, nll), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            params, opt_state, om = apply_updates(opt_cfg, params, grads, opt_state)
+            return params, opt_state, nll
+
+        return (train_step, (params_tpl, opt_tpl, batch_tpl),
+                (ns(pspecs), ns(opt_specs), ns(bspecs)),
+                (ns(pspecs), ns(opt_specs), NamedSharding(mesh, P())))
+
+    if shape.step == StepKind.PREFILL:
+        def prefill_step(params, batch):
+            logits, caches = T.prefill(params, cfg, batch, seq_len=S,
+                                       act_sharding=act_shd, unroll=unroll,
+                                       attn_impl=attn_impl,
+                                       moe_dispatch_sharding=moe_shd)
+            return logits, caches
+
+        cache_tpl = jax.eval_shape(prefill_step, params_tpl, batch_tpl)[1]
+        cspecs = sh.cache_specs_for(cache_tpl, cfg, mesh, B, policy)
+        logits_spec = P(b_ax, None, None)
+        return (prefill_step, (params_tpl, batch_tpl),
+                (ns(pspecs), ns(bspecs)),
+                (NamedSharding(mesh, logits_spec), ns(cspecs)))
+
+    # DECODE: one token against a KV cache of seq_len
+    cache_tpl = cache_template(cfg, B, S)
+    cspecs = sh.cache_specs_for(cache_tpl, cfg, mesh, B, policy)
+
+    cache_update = "select" if policy.select_cache_update else "dus"
+
+    def decode_fn(params, tokens, pos, caches):
+        logits, new_caches = T.decode_step(
+            params, cfg, tokens, pos, caches, act_sharding=act_shd,
+            unroll=unroll, cache_update=cache_update,
+            mixed_precision=policy.attn_mixed_precision)
+        return logits, new_caches
+
+    tok_tpl = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_tpl = jax.ShapeDtypeStruct((), jnp.int32)
+    return (decode_fn, (params_tpl, tok_tpl, pos_tpl, cache_tpl),
+            (ns(pspecs), NamedSharding(mesh, P(b_ax, None)),
+             NamedSharding(mesh, P()), ns(cspecs)),
+            (NamedSharding(mesh, P(b_ax, None, None)), ns(cspecs)))
+
+
+# ---------------------------------------------------------------------------
+# Lower + compile + analyse
+
+
+def lower_and_compile(cfg: ArchConfig, shape, mesh, policy: sh.Policy,
+                      unroll: bool = False):
+    fn, args, in_sh, out_sh = build_step(cfg, shape, mesh, policy, unroll)
+    # buffer donation: train_step updates (params, opt) in place; serve_step
+    # updates the KV cache in place — without this the dry-run double-counts
+    # the dominant buffers.
+    if shape.step == StepKind.TRAIN:
+        donate = (0, 1)
+    elif shape.step == StepKind.DECODE:
+        donate = (3,)
+    else:
+        donate = ()
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "peak_memory_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = float(v)
+        # peak = live-buffer high-water mark per device (what must fit HBM)
+        out["total_gb"] = out.get("peak_memory_in_bytes", 0.0) / 1e9
+    except Exception as e:  # pragma: no cover
+        out["error"] = str(e)
+    return out
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             probes: bool = True, policy: Optional[sh.Policy] = None,
+             verbose: bool = True) -> Dict:
+    """Dry-run one (architecture x input shape x mesh): lower + compile the
+    full model, then (optionally) the two unrolled roofline probes."""
+    policy = policy or sh.Policy()
+    shape = get_shape(shape_name)
+    cfg0 = get_arch(arch)
+    cfg, variant_note = serving_variant(cfg0, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = mesh.size
+    rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "chips": chips, "note": variant_note,
+                 "policy": dataclasses.asdict(policy)}
+    t0 = time.time()
+    lowered, compiled = lower_and_compile(cfg, shape, mesh, policy)
+    rec["compile_s"] = time.time() - t0
+    rec["memory"] = memory_summary(compiled)
+    ca = compiled.cost_analysis()
+    rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                            if isinstance(v, (int, float))
+                            and k in ("flops", "bytes accessed",
+                                      "utilization operand 0", "optimal_seconds")}
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] compiled in "
+              f"{rec['compile_s']:.1f}s  mem={rec['memory'].get('total_gb', float('nan')):.2f}GB/dev "
+              f"flops/dev={rec['cost_analysis'].get('flops', 0):.3e}")
+
+    if probes:
+        la, lb = probe_layer_counts(cfg)
+        pts = []
+        for l in (la, lb):
+            pcfg = with_layers(cfg, l)
+            _, pc = lower_and_compile(pcfg, shape, mesh, policy, unroll=True)
+            pts.append(rl.probe_from_compiled(l, pc))
+            if verbose:
+                print(f"    probe L={l}: flops={pts[-1].flops:.3e} "
+                      f"coll={pts[-1].coll_bytes:.3e}B")
+        totals = rl.extrapolate(pts[0], pts[1], cfg.n_layers)
+        mf = model_flops(cfg, shape)
+        roof = rl.build_roofline(
+            arch, shape_name, mesh_name, chips, totals, mf["model_flops"],
+            memory_per_chip_gb=rec["memory"].get("total_gb"),
+            notes=variant_note)
+        rec["probes"] = [dataclasses.asdict(p) for p in pts]
+        rec["roofline"] = dataclasses.asdict(roof)
+        if verbose:
+            r = roof
+            print(f"    roofline: compute={r.compute_s*1e3:.2f}ms "
+                  f"memory={r.memory_s*1e3:.2f}ms coll={r.collective_s*1e3:.2f}ms "
+                  f"-> {r.bottleneck}-bound, useful={r.useful_ratio:.2f}")
+    return rec
+
+
+def save_record(rec: Dict, out_dir: str = RESULTS_DIR) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return path
+
+
+OPTIMIZED_POLICY = sh.Policy(chunked_attention=True, moe_local_dispatch=True,
+                             select_cache_update=True,
+                             attn_mixed_precision=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, help="input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="use the SSPerf-winning policy instead of baseline")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else [s.name for s in ALL_SHAPES]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    policy = OPTIMIZED_POLICY if args.optimized else None
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    # probes only make sense for the (single-pod) roofline
+                    rec = run_pair(arch, shape, multi_pod=mp,
+                                   probes=not args.no_probes and not mp,
+                                   policy=policy)
+                    save_record(rec, args.out)
+                except Exception as e:
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"FAILED [{arch} x {shape} x mp={mp}]: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nALL DRY-RUNS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing driver.
+
+Runs one (arch x shape) pair under a sequence of sharding/impl policy
+variants, records the roofline terms per variant, and prints the
+hypothesis -> change -> before/after trail.  Used for the three chosen
+pairs (and anything else you point it at):
+
+    PYTHONPATH=src python -m repro.launch.perf --arch deepseek-67b --shape prefill_32k
+"""
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+from typing import Dict, List, Optional, Tuple  # noqa: E402
+
+from repro.distributed import sharding as sh    # noqa: E402
+from repro.launch.dryrun import RESULTS_DIR, run_pair  # noqa: E402
+
+PERF_DIR = os.path.join(os.path.dirname(RESULTS_DIR), "perf")
+
+
+def variants_for(shape_name: str, arch: str) -> List[Tuple[str, sh.Policy, str]]:
+    """(variant-name, policy, hypothesis) sequences per shape kind."""
+    base = sh.Policy()
+    out = [("baseline", base, "paper-faithful baseline policy")]
+    if shape_name in ("train_4k", "prefill_32k"):
+        out.append((
+            "chunked_attn",
+            dataclasses.replace(base, chunked_attention=True),
+            "score matrix (S*T*H fp32) dominates HBM traffic; chunked "
+            "online-softmax keeps it in registers/VMEM -> memory term "
+            "should drop toward the weight+activation floor"))
+        out.append((
+            "chunked_attn+ep",
+            dataclasses.replace(base, chunked_attention=True,
+                                moe_expert_parallel=True),
+            "expert weights are TP-sharded on d_ff; sharding the EXPERT dim "
+            "instead turns per-layer weight all-gathers into token "
+            "all-to-alls (top2/E of the volume) -> collective term drops"))
+        out.append((
+            "chunked+moe_shard",
+            dataclasses.replace(base, chunked_attention=True,
+                                shard_moe_dispatch=True),
+            "the L-probes show ~100GB/chip of collectives per step: GSPMD "
+            "replicates the (E, C, d) MoE dispatch buffer across the data "
+            "axis; constraining C over 'data' and d over 'model' keeps the "
+            "scatter local -> collective term should drop by the dispatch "
+            "share"))
+        out.append((
+            "chunked+moe_local",
+            dataclasses.replace(base, chunked_attention=True,
+                                moe_local_dispatch=True),
+            "global top-k dispatch needs a cumsum over ALL tokens (rank) "
+            "and a combine-gather that both cross data shards — the probe "
+            "shows them as the dominant all-gathers; per-shard LOCAL "
+            "dispatch (the production design) keeps every MoE tensor's "
+            "leading dim on the data axis -> those collectives vanish"))
+        out.append((
+            "chunked_attn+no_fsdp",
+            dataclasses.replace(base, chunked_attention=True, fsdp=False),
+            "FSDP all-gathers weights every step; with 256-way sharding the "
+            "gather may dominate collectives — trading memory for traffic "
+            "should show in the collective term (expected REGRESSION in "
+            "memory capacity; test quantifies the tradeoff)"))
+    else:  # decode shapes
+        out.append((
+            "select_cache_update",
+            dataclasses.replace(base, select_cache_update=True),
+            "dynamic_update_slice at a dynamic slot forces SPMD to "
+            "REPLICATE the seq-sharded KV cache every step (the involuntary "
+            "full-rematerialization warnings) -> iota==slot masked select "
+            "is elementwise and layout-preserving; memory term should fall "
+            "to weights+2x cache traffic"))
+        sel = dataclasses.replace(base, select_cache_update=True)
+        out.append((
+            "sel+mixed_prec",
+            dataclasses.replace(sel, attn_mixed_precision=True),
+            "the decode profile shows `convert` dominating HBM bytes: the "
+            "reference attention materialises fp32 copies of the bf16 KV "
+            "cache; bf16 dots with an fp32 accumulator (preferred_element_"
+            "type — what the MXU does natively) should cut cache traffic "
+            "~3x and the memory term with it"))
+        out.append((
+            "sel+replicated_kv_seq",
+            dataclasses.replace(sel, seq_sharded_cache=False),
+            "seq-sharded KV makes every decode step reduce partial attention "
+            "across 'model'; replicating the cache removes that collective "
+            "at a memory cost — quantify the tradeoff (composed on the "
+            "select fix)"))
+        out.append((
+            "sel+expert_parallel",
+            dataclasses.replace(sel, moe_expert_parallel=True),
+            "at B<=128 decode, capacity dispatch computes all E experts; "
+            "expert-parallel sharding moves tokens (all-to-all) instead of "
+            "computing idle experts -> compute term drops ~E/topk "
+            "(composed on the select fix)"))
+        out.append((
+            "sel+no_act_shard",
+            dataclasses.replace(sel, act_model_sharded=False),
+            "per-block activation resharding at B tokens is latency-bound "
+            "collectives; replicated activations should cut the collective "
+            "term for single-token decode (composed on the select fix)"))
+    return out
+
+
+def hillclimb(arch: str, shape: str, *, multi_pod: bool = False,
+              variants: Optional[List[str]] = None) -> List[Dict]:
+    os.makedirs(PERF_DIR, exist_ok=True)
+    results = []
+    for name, policy, hypothesis in variants_for(shape, arch):
+        if variants and name not in variants and name != "baseline":
+            continue
+        print(f"\n=== {arch} x {shape} :: {name} ===")
+        print(f"hypothesis: {hypothesis}")
+        try:
+            rec = run_pair(arch, shape, multi_pod=multi_pod, probes=True,
+                           policy=policy)
+        except Exception as e:
+            print(f"variant FAILED: {e!r}")
+            results.append({"variant": name, "error": repr(e),
+                            "hypothesis": hypothesis})
+            continue
+        rec["variant"] = name
+        rec["hypothesis"] = hypothesis
+        path = os.path.join(PERF_DIR, f"{arch}__{shape}__{name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        results.append(rec)
+    _summarise(arch, shape, results)
+    return results
+
+
+def _summarise(arch, shape, results):
+    print(f"\n### summary {arch} x {shape}")
+    print(f"{'variant':24s} {'compute_ms':>10} {'memory_ms':>10} {'coll_ms':>9} "
+          f"{'step_ms':>9} {'bound':>10} {'peakGB':>7}")
+    base_step = None
+    for r in results:
+        roof = r.get("roofline")
+        if not roof:
+            print(f"{r['variant']:24s}  FAILED: {r.get('error')}")
+            continue
+        step = roof["step_time_s"] * 1e3
+        if r["variant"] == "baseline":
+            base_step = step
+        gain = f" ({base_step / step:.2f}x)" if base_step and r["variant"] != "baseline" else ""
+        print(f"{r['variant']:24s} {roof['compute_s']*1e3:10.2f} "
+              f"{roof['memory_s']*1e3:10.2f} {roof['collective_s']*1e3:9.2f} "
+              f"{step:9.2f}{gain} {roof['bottleneck']:>10} "
+              f"{r['memory'].get('total_gb', float('nan')):7.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", action="append", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    hillclimb(args.arch, args.shape, multi_pod=args.multi_pod,
+              variants=args.variant)
+
+
+if __name__ == "__main__":
+    main()

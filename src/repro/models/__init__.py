@@ -1,0 +1,5 @@
+from repro.models import (attention, flops, frontends, layers, mamba, moe,
+                          rwkv, scan_utils, transformer)
+
+__all__ = ["attention", "flops", "frontends", "layers", "mamba", "moe",
+           "rwkv", "scan_utils", "transformer"]

@@ -1,0 +1,27 @@
+"""Modality-frontend STUBS (the one sanctioned carve-out).
+
+For [audio] and [vlm] architectures the assignment specifies the
+transformer backbone only; the mel-spectrogram/conv feature extractor and
+the ViT/SigLIP vision encoder are stubs.  ``input_specs()`` in
+repro.launch.dryrun provides ShapeDtypeStruct stand-ins; here we provide
+the matching *concrete* generators used by smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+
+
+def stub_frontend_embeddings(cfg: ArchConfig, key, batch: int,
+                             num_tokens: int | None = None) -> jnp.ndarray:
+    """Precomputed frame/patch embeddings of the right shape."""
+    assert cfg.frontend is not None, f"{cfg.name} has no frontend stub"
+    n = num_tokens or cfg.frontend.num_tokens
+    x = jax.random.normal(key, (batch, n, cfg.frontend.embed_dim), jnp.float32)
+    return x.astype(jnp.dtype(cfg.dtype))
+
+
+def frontend_token_count(cfg: ArchConfig) -> int:
+    return 0 if cfg.frontend is None else cfg.frontend.num_tokens

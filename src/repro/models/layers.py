@@ -1,0 +1,109 @@
+"""Shared neural-net building blocks (pure-functional JAX).
+
+Parameters are plain pytrees (nested dicts of jnp arrays); every function
+takes ``(params, inputs, cfg)`` and returns arrays.  No framework objects —
+this keeps everything trivially compatible with jit / scan / pjit.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+
+# ---------------------------------------------------------------------------
+# Initialisers
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def rms_norm_init(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim//2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jax.nn.silu(x @ params["w_gate"])
+    return (gate * (x @ params["w_up"])) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Masks
+
+
+def causal_mask(q_len: int, kv_len: int, *, window: int | None = None,
+                q_offset: int = 0) -> jnp.ndarray:
+    """Boolean (q_len, kv_len) mask; True = attend.  ``q_offset`` is the
+    absolute position of query 0 relative to kv position 0."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > (q_pos - window)
+    return mask
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def param_size(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))

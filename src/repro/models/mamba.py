@@ -1,0 +1,131 @@
+"""Mamba (S6) block — selective state-space model [Jamba, arXiv:2403.19887].
+
+    h_t = exp(dt_t ⊙ A) h_{t-1} + dt_t ⊙ (B_t x_t)
+    y_t = C_t · h_t + D ⊙ x_t
+
+with input-dependent dt, B, C.  Sequence path uses the chunked diagonal
+linear scan; decode keeps an O(1) recurrent state (h, conv window).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.layers import dense_init
+from repro.models.scan_utils import linear_scan_emit
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return math.ceil(cfg.d_model / 16)
+
+
+def mamba_init(key, cfg: ArchConfig, dtype) -> dict:
+    mc = cfg.mamba
+    d, di, ds = cfg.d_model, mc.d_inner(cfg.d_model), mc.d_state
+    dtr = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    A = -jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (mc.d_conv, di), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * ds, dtype),
+        "dt_proj_w": dense_init(ks[3], dtr, di, dtype),
+        "dt_proj_b": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "A_log": jnp.log(-A),                         # (di, ds) fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _ssm_terms(params: dict, xs: jnp.ndarray, cfg: ArchConfig):
+    """xs: (B,S,di) post-conv activations -> factored scan terms:
+    dt (B,S,di), dtx (B,S,di), Bm/Cm (B,S,ds).  The (di,ds) outer products
+    are only formed per chunk inside the scan."""
+    ds = cfg.mamba.d_state
+    dtr = _dt_rank(cfg)
+    proj = xs @ params["x_proj"]                                  # (B,S,dtr+2ds)
+    dt_in, Bm, Cm = jnp.split(proj.astype(jnp.float32), [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj_w"].astype(jnp.float32)
+                         + params["dt_proj_b"].astype(jnp.float32))  # (B,S,di)
+    dtx = dt * xs.astype(jnp.float32)
+    return dt, dtx, Bm, Cm
+
+
+def _conv1d(params: dict, x: jnp.ndarray, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: (B,S,di). state: (B, d_conv-1, di) history."""
+    dc = params["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                        # (B, S+dc-1, di)
+    out = sum(xp[:, i:i + x.shape[1]] * params["conv_w"][i] for i in range(dc))
+    new_state = xp[:, -(dc - 1):]
+    return out + params["conv_b"], new_state
+
+
+def mamba_forward(params: dict, x: jnp.ndarray, cfg: ArchConfig,
+                  state: Optional[dict] = None, chunk: int = 128
+                  ) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence path. x: (B,S,d). Returns (y, final_state)."""
+    B, S, _ = x.shape
+    di = cfg.mamba.d_inner(cfg.d_model)
+    ds = cfg.mamba.d_state
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xs, new_conv = _conv1d(params, xs, conv_state)
+    xs = jax.nn.silu(xs)
+    dt, dtx, Bm, Cm = _ssm_terms(params, xs, cfg)
+    h0 = jnp.zeros((B, di, ds), jnp.float32) if state is None else state["h"]
+    A = -jnp.exp(params["A_log"])                                 # (di,ds)
+    t0 = lambda t: jnp.moveaxis(t, 1, 0)                          # time-major
+    inputs = (t0(dt), t0(dtx), t0(Bm), t0(Cm))
+
+    def make_ab(cin):
+        dt_c, dtx_c, B_c, _ = cin
+        a = jnp.exp(dt_c[..., None] * A)                          # (c,B,di,ds)
+        b = dtx_c[..., None] * B_c[..., None, :]                  # (c,B,di,ds)
+        return a, b
+
+    def emit(h_prev, h_post, cin):
+        # y_t = C_t · h_t  — reduce the state dim immediately (no O(S·state))
+        return jnp.einsum("sbde,sbe->sbd", h_post, cin[3])
+
+    y, h_last = linear_scan_emit(inputs, h0, make_ab, emit, chunk=chunk)
+    y = jnp.moveaxis(y, 0, 1)                                     # (B,S,di)
+    y = y + xs.astype(jnp.float32) * params["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    return y, {"h": h_last, "conv": new_conv.astype(x.dtype)}
+
+
+def mamba_decode_step(params: dict, x: jnp.ndarray, cfg: ArchConfig,
+                      state: dict) -> Tuple[jnp.ndarray, dict]:
+    """One-token recurrent step. x: (B,1,d)."""
+    B = x.shape[0]
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, new_conv = _conv1d(params, xs, state["conv"])
+    xs = jax.nn.silu(xs)
+    dt, dtx, Bm, Cm = _ssm_terms(params, xs, cfg)                 # (B,1,...)
+    A = -jnp.exp(params["A_log"])                                 # (di,ds)
+    a = jnp.exp(dt[:, 0, :, None] * A)                            # (B,di,ds)
+    b = dtx[:, 0, :, None] * Bm[:, 0, None, :]
+    h = a * state["h"] + b                                        # (B,di,ds)
+    y = jnp.einsum("bde,be->bd", h, Cm[:, 0])[:, None]            # (B,1,di)
+    y = y + xs.astype(jnp.float32) * params["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z)) @ params["out_proj"]
+    return y, {"h": h, "conv": new_conv}
+
+
+def mamba_init_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    di = cfg.mamba.d_inner(cfg.d_model)
+    return {
+        "h": jnp.zeros((batch, di, cfg.mamba.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba.d_conv - 1, di), dtype),
+    }

@@ -1,0 +1,189 @@
+"""Mixture-of-Experts layer (top-k routing, SwiGLU experts).
+
+Two execution paths:
+
+* ``moe_dense_ref``  — computes every expert for every token and mixes by
+  router weight.  O(E) compute; the smoke-test / property-test oracle.
+* ``moe_capacity``   — GShard-style fixed-capacity dispatch implemented
+  with scatter/gather (cheap, no O(T^2) dispatch einsum).  Tokens over
+  capacity are dropped (weight renormalised); with a generous capacity
+  factor it is numerically identical to the oracle.  Under pjit the expert
+  dimension shards over the ``model``/``expert`` axis, giving expert
+  parallelism; the baseline dry-run uses GSPMD's choice of collectives and
+  §Perf iterates on it.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.layers import dense_init
+
+
+def moe_init(key, cfg: ArchConfig, dtype) -> dict:
+    E = cfg.moe.num_experts
+    k_router, k1, k2, k3 = jax.random.split(key, 4)
+    d, f = cfg.d_model, cfg.d_ff
+
+    def stack(k, din, dout):
+        return jax.vmap(lambda kk: dense_init(kk, din, dout, dtype))(jax.random.split(k, E))
+
+    return {
+        "router": dense_init(k_router, d, E, jnp.float32),
+        "w_gate": stack(k1, d, f),
+        "w_up": stack(k2, d, f),
+        "w_down": stack(k3, f, d),
+    }
+
+
+def _route(params: dict, x: jnp.ndarray, cfg: ArchConfig):
+    """x: (T, d) -> (weights (T,k), idx (T,k), aux_loss scalar)."""
+    E, k = cfg.moe.num_experts, cfg.moe.top_k
+    logits = (x.astype(jnp.float32) @ params["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, k)                        # (T,k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # Switch-style load-balance aux loss.
+    T = x.shape[0]
+    hard = jnp.sum(jax.nn.one_hot(idx, E), axis=1)                # (T,E)
+    frac_tokens = jnp.mean(hard, axis=0)                          # (E,)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs) * cfg.moe.aux_loss_coef
+    return weights, idx, aux
+
+
+def _expert_ffn(params: dict, xe: jnp.ndarray) -> jnp.ndarray:
+    """xe: (E, C, d) -> (E, C, d); batched SwiGLU over the expert dim."""
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    return jnp.einsum("ecf,efd->ecd", gate * up, params["w_down"])
+
+
+def moe_dense_ref(params: dict, x: jnp.ndarray, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle: run all experts on all tokens. x: (T, d)."""
+    weights, idx, aux = _route(params, x, cfg)
+    E = cfg.moe.num_experts
+    xe = jnp.broadcast_to(x[None], (E,) + x.shape)                # (E,T,d)
+    ye = _expert_ffn(params, xe)                                  # (E,T,d)
+    gate = jnp.sum(jax.nn.one_hot(idx, E) * weights[..., None], axis=1)  # (T,E)
+    y = jnp.einsum("te,etd->td", gate.astype(ye.dtype), ye)
+    return y, aux
+
+
+def moe_capacity(params: dict, x: jnp.ndarray, cfg: ArchConfig,
+                 capacity: int | None = None,
+                 dispatch_sharding=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fixed-capacity scatter/gather dispatch. x: (T, d).
+
+    ``dispatch_sharding``: optional NamedSharding for the (E, C+1, d)
+    dispatched/expert-output tensors.  Without it GSPMD tends to replicate
+    the dispatch buffer across the data axis (the dominant collective in
+    the MoE train dry-runs); constraining C over the data axis keeps the
+    scatter local (§Perf iteration 'moe_shard').
+    """
+    T, d = x.shape
+    E, k = cfg.moe.num_experts, cfg.moe.top_k
+    if capacity is None:
+        capacity = max(1, int(cfg.moe.capacity_factor * k * T / E))
+        if dispatch_sharding is not None:
+            # make C+1 divide the mesh axes the constraint names (256 covers
+            # any product of the 16x16 pod axes)
+            capacity = -(-(capacity + 1) // 256) * 256 - 1
+    weights, idx, aux = _route(params, x, cfg)
+
+    flat_expert = idx.reshape(-1)                                 # (T*k,)
+    flat_weight = weights.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T), k)
+    # Rank of each (token, slot) within its expert, in token order.
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)      # (T*k, E)
+    rank = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1  # (T*k,)
+    keep = rank < capacity
+    safe_rank = jnp.where(keep, rank, capacity)                   # overflow -> scratch row
+
+    # Dispatch: (E, capacity+1, d); the +1 row absorbs dropped tokens.
+    dispatched = jnp.zeros((E, capacity + 1, d), x.dtype)
+    dispatched = dispatched.at[flat_expert, safe_rank].set(x[flat_token])
+    if dispatch_sharding is not None:
+        dispatched = jax.lax.with_sharding_constraint(dispatched, dispatch_sharding)
+    ye = _expert_ffn(params, dispatched[:, :capacity])            # (E, C, d)
+    ye = jnp.concatenate([ye, jnp.zeros((E, 1, d), ye.dtype)], axis=1)
+    if dispatch_sharding is not None:
+        ye = jax.lax.with_sharding_constraint(ye, dispatch_sharding)
+    # Combine.
+    gathered = ye[flat_expert, safe_rank]                         # (T*k, d)
+    gathered = gathered * (flat_weight * keep).astype(gathered.dtype)[:, None]
+    y = jnp.sum(gathered.reshape(T, k, d), axis=1)
+    return y, aux
+
+
+def moe_capacity_grouped(params: dict, x: jnp.ndarray, cfg: ArchConfig,
+                         n_groups: int, capacity: int | None = None,
+                         group_sharding=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """LOCAL dispatch: tokens are split into ``n_groups`` contiguous groups
+    (aligned with the data shards), and routing/rank/dispatch/combine all
+    carry the group dim — so the cumsum and gathers never cross shards.
+    This is the per-shard dispatch every production MoE system uses; the
+    global-cumsum variant above is the faithful GShard oracle.
+
+    x: (T, d) with T % n_groups == 0.
+    """
+    T, d = x.shape
+    E, k = cfg.moe.num_experts, cfg.moe.top_k
+    g = n_groups
+    Tl = T // g
+    if capacity is None:
+        capacity = max(1, int(cfg.moe.capacity_factor * k * Tl / E))
+        capacity = -(-(capacity + 1) // 16) * 16 - 1   # C+1 16-divisible
+    xg = x.reshape(g, Tl, d)
+    if group_sharding is not None:
+        xg = jax.lax.with_sharding_constraint(xg, group_sharding["x"])
+    weights, idx, aux = _route(params, xg.reshape(g * Tl, d), cfg)
+    weights = weights.reshape(g, Tl, k)
+    idx = idx.reshape(g, Tl, k)
+
+    flat_expert = idx.reshape(g, Tl * k)
+    flat_weight = weights.reshape(g, Tl * k)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)      # (g,Tl*k,E)
+    rank = jnp.sum(jnp.cumsum(onehot, axis=1) * onehot, axis=-1) - 1
+    keep = rank < capacity
+    safe_rank = jnp.where(keep, rank, capacity)
+
+    gi = jnp.arange(g)[:, None]
+    tok = jnp.broadcast_to(jnp.repeat(jnp.arange(Tl), k)[None], (g, Tl * k))
+    dispatched = jnp.zeros((g, E, capacity + 1, d), x.dtype)
+    dispatched = dispatched.at[gi, flat_expert, safe_rank].set(xg[gi, tok])
+    if group_sharding is not None:
+        dispatched = jax.lax.with_sharding_constraint(dispatched,
+                                                      group_sharding["dispatch"])
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", dispatched[:, :, :capacity],
+                                  params["w_gate"]))
+    up = jnp.einsum("gecd,edf->gecf", dispatched[:, :, :capacity], params["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", gate * up, params["w_down"])
+    ye = jnp.concatenate([ye, jnp.zeros((g, E, 1, d), ye.dtype)], axis=2)
+    if group_sharding is not None:
+        ye = jax.lax.with_sharding_constraint(ye, group_sharding["dispatch"])
+    gathered = ye[gi, flat_expert, safe_rank]                     # (g,Tl*k,d)
+    gathered = gathered * (flat_weight * keep).astype(gathered.dtype)[..., None]
+    y = jnp.sum(gathered.reshape(g, Tl, k, d), axis=2)
+    return y.reshape(T, d), aux
+
+
+def moe_apply(params: dict, x: jnp.ndarray, cfg: ArchConfig,
+              mode: str = "capacity", dispatch_sharding=None,
+              local_groups: int = 0,
+              group_sharding=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (B, S, d), aux loss."""
+    B, S, d = x.shape
+    flat = x.reshape(B * S, d)
+    if mode == "dense":
+        y, aux = moe_dense_ref(params, flat, cfg)
+    elif local_groups > 1 and (B * S) % local_groups == 0:
+        y, aux = moe_capacity_grouped(params, flat, cfg, local_groups,
+                                      group_sharding=group_sharding)
+    else:
+        y, aux = moe_capacity(params, flat, cfg,
+                              dispatch_sharding=dispatch_sharding)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,145 @@
+"""RWKV-6 "Finch" block — attention-free linear recurrence with
+data-dependent per-channel decay [arXiv:2404.05892].
+
+Per head (size hd) with receptance r, key k, value v, decay w, bonus u:
+
+    o_t = r_t^T (S_{t-1} + diag(u ⊙ k_t) v_t ... )      (bonus on current)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+where w_t = exp(-exp(wlog_t)) is data-dependent (LoRA on the shifted
+input), matching the Finch formulation.  The sequence path reuses the
+chunked diagonal linear scan over the (hd x hd) state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.layers import dense_init
+from repro.models.scan_utils import linear_scan_emit
+
+LORA_RANK = 32
+
+
+def _heads(cfg: ArchConfig) -> Tuple[int, int]:
+    hd = cfg.rwkv.head_size
+    return cfg.d_model // hd, hd
+
+
+def rwkv_init(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    H, hd = _heads(cfg)
+    ks = jax.random.split(key, 12)
+    p = {
+        # token-shift interpolation factors (static part of ddlerp)
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "wr": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wg": dense_init(ks[3], d, d, dtype),
+        "wo": dense_init(ks[4], d, d, dtype),
+        # data-dependent decay LoRA: d -> rank -> d
+        "wdec_a": dense_init(ks[5], d, LORA_RANK, dtype),
+        "wdec_b": dense_init(ks[6], LORA_RANK, d, dtype),
+        "decay_base": jnp.full((d,), -6.0, jnp.float32),
+        "bonus_u": (jax.random.normal(ks[7], (H, hd), jnp.float32) * 0.1),
+        "ln_x": jnp.ones((d,), dtype),
+        # channel-mix (RWKV FFN)
+        "cm_mu_k": jnp.full((d,), 0.5, dtype), "cm_mu_r": jnp.full((d,), 0.5, dtype),
+        "cm_wk": dense_init(ks[8], d, cfg.d_ff, dtype),
+        "cm_wv": dense_init(ks[9], cfg.d_ff, d, dtype),
+        "cm_wr": dense_init(ks[10], d, d, dtype),
+    }
+    return p
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x: (B,S,d) -> x_{t-1}; prev (B,1,d) is the last token of the previous
+    segment (zeros at sequence start)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _wkv_terms(params: dict, x: jnp.ndarray, xs: jnp.ndarray, cfg: ArchConfig):
+    """Produce r,k,v,g,w for the wkv recurrence. x,xs: (B,S,d)."""
+    B, S, d = x.shape
+    H, hd = _heads(cfg)
+    r = _mix(x, xs, params["mu_r"]) @ params["wr"]
+    k = _mix(x, xs, params["mu_k"]) @ params["wk"]
+    v = _mix(x, xs, params["mu_v"]) @ params["wv"]
+    g = jax.nn.silu(_mix(x, xs, params["mu_g"]) @ params["wg"])
+    wx = _mix(x, xs, params["mu_w"])
+    wlog = params["decay_base"] + (jnp.tanh(wx @ params["wdec_a"]) @ params["wdec_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog))                                   # (B,S,d) in (0,1)
+    shp = (B, S, H, hd)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp), g,
+            w.reshape(shp))
+
+
+def rwkv_time_mix(params: dict, x: jnp.ndarray, cfg: ArchConfig,
+                  state: Optional[dict] = None, chunk: int = 128
+                  ) -> Tuple[jnp.ndarray, dict]:
+    """x: (B,S,d) -> (y, new_state)."""
+    B, S, d = x.shape
+    H, hd = _heads(cfg)
+    prev_x = None if state is None else state["shift_tm"]
+    xs = _token_shift(x, prev_x)
+    r, k, v, g, w = _wkv_terms(params, x, xs, cfg)
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    S0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None else state["wkv"])
+    u = params["bonus_u"]
+    t0 = lambda t: jnp.moveaxis(t, 1, 0)                          # time-major
+    inputs = (t0(rf), t0(kf), t0(vf), t0(wf))
+
+    def make_ab(cin):
+        # state (B,H,hd,hd); a_t = w_t broadcast on the k-index axis;
+        # b_t = k_t v_t^T — outer products only formed per chunk.
+        _, kc, vc, wc = cin
+        b = kc[..., :, None] * vc[..., None, :]                   # (c,B,H,hd,hd)
+        a = jnp.broadcast_to(wc[..., :, None], b.shape)
+        return a, b
+
+    def emit(S_prev, S_post, cin):
+        rc, kc, vc, _ = cin                                       # (c,B,H,hd)
+        kv = kc[..., :, None] * vc[..., None, :]                  # (c,B,H,hd,hd)
+        eff = S_prev + u[None, None, :, :, None] * kv
+        return jnp.einsum("cbhij,cbhi->cbhj", eff, rc)            # (c,B,H,hd)
+
+    o, S_last = linear_scan_emit(inputs, S0, make_ab, emit, chunk=chunk)
+    o = jnp.moveaxis(o, 0, 1).reshape(B, S, d)                    # (B,S,d)
+    # group-norm-ish: rms over head dim then learned scale
+    o = o / (jnp.sqrt(jnp.mean(jnp.square(o.reshape(B, S, H, hd)), axis=-1, keepdims=True) + 1e-5)
+             ).reshape(B, S, H, 1).repeat(hd, -1).reshape(B, S, d)
+    y = ((o * params["ln_x"].astype(jnp.float32)).astype(x.dtype) * g) @ params["wo"]
+    new_state = {"wkv": S_last, "shift_tm": x[:, -1:]}
+    return y, new_state
+
+
+def rwkv_channel_mix(params: dict, x: jnp.ndarray,
+                     state: Optional[dict] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    prev = None if state is None else state
+    xs = _token_shift(x, prev)
+    k = _mix(x, xs, params["cm_mu_k"]) @ params["cm_wk"]
+    r = jax.nn.sigmoid(_mix(x, xs, params["cm_mu_r"]) @ params["cm_wr"])
+    v = (jnp.square(jax.nn.relu(k))) @ params["cm_wv"]
+    return r * v, x[:, -1:]
+
+
+def rwkv_init_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    H, hd = _heads(cfg)
+    d = cfg.d_model
+    return {
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((batch, 1, d), dtype),
+        "shift_cm": jnp.zeros((batch, 1, d), dtype),
+    }

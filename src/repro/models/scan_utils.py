@@ -1,0 +1,80 @@
+"""Chunked diagonal-decay linear recurrences.
+
+Both Mamba's selective scan and RWKV6's wkv recurrence are instances of
+
+    h_t = a_t * h_{t-1} + b_t          (a broadcast-diagonal over state)
+
+which is associative.  The full state sequence is O(T * state) memory —
+prohibitive for matrix-valued states (RWKV: hd*hd per head; Mamba:
+d_inner*d_state) — and even a_t/b_t themselves are outer products of the
+same size.  ``linear_scan_emit`` therefore runs an outer ``lax.scan`` over
+chunks and, *inside* each chunk, (1) builds a/b from factored inputs via
+``make_ab``, (2) runs an ``associative_scan``, and (3) immediately reduces
+states to outputs via ``emit_fn``.  Live memory is O(chunk * state).
+
+The outer scan's trip count is invisible to XLA ``cost_analysis``; the
+roofline module corrects it via cost components
+(repro.analysis.roofline).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, a2 * b1 + b2
+
+
+def linear_scan_emit(inputs, h0: jnp.ndarray, make_ab: Callable,
+                     emit_fn: Callable, chunk: int = 64
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t h_{t-1} + b_t, chunk-factored.
+
+    inputs: pytree with leading time axis T (small per-step tensors).
+    make_ab(chunk_inputs) -> (a, b) each (c, *state)  — built per chunk.
+    emit_fn(h_prev (c,*state), h_post (c,*state), chunk_inputs) -> y (c, ...).
+    Returns (y: (T, ...), h_T).
+    """
+    leaves = jax.tree_util.tree_leaves(inputs)
+    T = leaves[0].shape[0]
+
+    def chunk_apply(h, cin):
+        a, b = make_ab(cin)
+        aa, bb = jax.lax.associative_scan(_combine, (a, b), axis=0)
+        hs = aa * h[None] + bb                       # states after each step
+        h_prev = jnp.concatenate([h[None], hs[:-1]], axis=0)
+        return hs[-1], emit_fn(h_prev, hs, cin)
+
+    if T <= chunk:
+        h_last, y = chunk_apply(h0, inputs)
+        return y, h_last
+    assert T % chunk == 0, f"T={T} not divisible by chunk={chunk}"
+    n = T // chunk
+
+    def reshape_c(x):
+        return x.reshape((n, chunk) + x.shape[1:])
+
+    xs = jax.tree_util.tree_map(reshape_c, inputs)
+    h_last, ys = jax.lax.scan(lambda h, c: chunk_apply(h, c), h0, xs)
+    y = ys.reshape((T,) + ys.shape[2:])
+    return y, h_last
+
+
+def linear_scan_ref(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray):
+    """Sequential oracle for tests: returns all post-update states."""
+    def body(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    h_last, hs = jax.lax.scan(body, h0, (a, b))
+    return hs, h_last
+
+
+def scan_chunk_count(T: int, chunk: int = 64) -> int:
+    """Number of outer-scan iterations ``linear_scan_emit`` performs."""
+    return 1 if T <= chunk else T // chunk

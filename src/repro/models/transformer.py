@@ -1,0 +1,434 @@
+"""Unified model definition for all assigned architectures.
+
+A model is a stack of residual blocks whose kinds come from
+``ArchConfig.block_kinds()``:
+
+* homogeneous stacks (dense / MoE / RWKV) are ``lax.scan``-ed over layers
+  with stacked parameters — compile cost is ONE block body;
+* Jamba's 1:7 Mamba:attention interleave scans over *groups* of
+  ``attn_every`` blocks (heterogeneous inside the group, stacked across
+  groups);
+* seamless-m4t adds a bidirectional encoder stack and cross-attention in
+  every decoder block.
+
+Three entry points per model, matching the assigned input shapes:
+``forward`` (training, full sequence), ``prefill`` (writes KV/state
+caches), ``decode_step`` (ONE token against the caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig, ArchType, BlockKind
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rk
+from repro.models.layers import (dense_init, dtype_of, embed_init, rms_norm,
+                                 rms_norm_init, swiglu, swiglu_init)
+
+SCAN_CHUNK = 64  # inner time-chunk for SSM scans
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+
+
+def _block_init(key, kind: BlockKind, cfg: ArchConfig, dtype,
+                cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": rms_norm_init(d, dtype)}
+    if kind in (BlockKind.ATTN, BlockKind.ATTN_MOE):
+        p["attn"] = attn.attn_init(ks[0], cfg, dtype)
+    elif kind in (BlockKind.MAMBA, BlockKind.MAMBA_MOE):
+        p["mamba"] = mb.mamba_init(ks[0], cfg, dtype)
+    elif kind == BlockKind.RWKV:
+        p["rwkv"] = rk.rwkv_init(ks[0], cfg, dtype)
+        p["ln2"] = rms_norm_init(d, dtype)
+        return p
+    if cross:
+        p["ln_cross"] = rms_norm_init(d, dtype)
+        p["cross"] = attn.attn_init(ks[2], cfg, dtype)
+    p["ln2"] = rms_norm_init(d, dtype)
+    if kind in (BlockKind.ATTN_MOE, BlockKind.MAMBA_MOE):
+        p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = swiglu_init(ks[1], d, cfg.d_ff, dtype)
+    return p
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-call context threaded through block application."""
+    mode: str                      # "full" | "prefill" | "decode"
+    positions: Optional[jnp.ndarray] = None   # (B,S) for full/prefill
+    pos: Optional[jnp.ndarray] = None         # scalar for decode
+    causal: bool = True
+    moe_mode: str = "capacity"
+    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+    cross_mask: Optional[jnp.ndarray] = None
+    act_sharding: Any = None       # NamedSharding constraint between blocks
+    unroll: bool = False           # unroll the layer scan (roofline probes)
+    attn_impl: str = "dense"       # "dense" | "chunked" (flash-style XLA)
+    cache_update: str = "dus"      # "dus" | "select" (SPMD-friendly)
+    mixed_precision: bool = False  # bf16 dots w/ f32 accum (MXU-style)
+    moe_dispatch_sharding: Any = None  # NamedSharding for (E,C,d) dispatch
+    moe_local_groups: int = 0      # per-shard local dispatch group count
+    moe_group_sharding: Any = None # shardings for the grouped dispatch
+
+
+def _apply_block(kind: BlockKind, p: dict, x: jnp.ndarray, cfg: ArchConfig,
+                 ctx: Ctx, cache: Optional[dict]) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    """Returns (x, new_cache, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Optional[dict] = None
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+
+    if kind == BlockKind.RWKV:
+        if ctx.mode == "full":
+            y, _ = rk.rwkv_time_mix(p["rwkv"], h, cfg, None, SCAN_CHUNK)
+            x = x + y
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            y2, _ = rk.rwkv_channel_mix(p["rwkv"], h2, None)
+            return x + y2, None, aux
+        tm_state = None if cache is None else {"wkv": cache["wkv"], "shift_tm": cache["shift_tm"]}
+        y, tm_new = rk.rwkv_time_mix(p["rwkv"], h, cfg, tm_state, SCAN_CHUNK)
+        x = x + y
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        cm_state = None if cache is None else cache["shift_cm"]
+        y2, cm_new = rk.rwkv_channel_mix(p["rwkv"], h2, cm_state)
+        new_cache = {"wkv": tm_new["wkv"], "shift_tm": tm_new["shift_tm"], "shift_cm": cm_new}
+        return x + y2, new_cache, aux
+
+    # --- sequence-mix sublayer (attention or mamba) ---
+    if kind in (BlockKind.ATTN, BlockKind.ATTN_MOE):
+        if ctx.mode == "full":
+            if ctx.causal:
+                y = attn.attention_forward(p["attn"], h, cfg, ctx.positions,
+                                           impl=ctx.attn_impl)
+            else:  # encoder: bidirectional
+                q, k, v = attn._project_qkv(p["attn"], h, cfg, ctx.positions)
+                o = attn.gqa_attend(q, k, v, None)
+                y = o.reshape(h.shape[0], h.shape[1], -1) @ p["attn"]["wo"]
+        elif ctx.mode == "prefill":
+            y, new_cache = attn.prefill_into_cache(p["attn"], h, cfg,
+                                                   ctx.positions, cache,
+                                                   impl=ctx.attn_impl)
+        else:
+            y, new_cache = attn.decode_step_attention(p["attn"], h, cfg,
+                                                      ctx.pos, cache,
+                                                      ctx.cache_update,
+                                                      ctx.mixed_precision)
+    else:  # mamba
+        if ctx.mode == "full":
+            y, _ = mb.mamba_forward(p["mamba"], h, cfg, None, SCAN_CHUNK)
+        elif ctx.mode == "prefill":
+            y, new_cache = mb.mamba_forward(p["mamba"], h, cfg, cache, SCAN_CHUNK)
+        else:
+            y, new_cache = mb.mamba_decode_step(p["mamba"], h, cfg, cache)
+    x = x + y
+
+    # --- cross-attention (enc-dec decoder) ---
+    if "cross" in p and ctx.cross_kv is not None:
+        hc = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        B, S, _ = hc.shape
+        hd = cfg.resolved_head_dim
+        q = (hc @ p["cross"]["wq"]).reshape(B, S, cfg.n_heads, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["cross"]["q_norm"], cfg.norm_eps)
+        ck, cv = ctx.cross_kv
+        m = None if ctx.cross_mask is None else jnp.broadcast_to(
+            ctx.cross_mask[:, None, :], (B, S, ck.shape[1]))
+        o = attn.gqa_attend(q, ck, cv, m)
+        x = x + o.reshape(B, S, -1) @ p["cross"]["wo"]
+
+    # --- channel-mix sublayer ---
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y2, aux = moe_mod.moe_apply(p["moe"], h2, cfg, ctx.moe_mode,
+                                    dispatch_sharding=ctx.moe_dispatch_sharding,
+                                    local_groups=ctx.moe_local_groups,
+                                    group_sharding=ctx.moe_group_sharding)
+    else:
+        y2 = swiglu(p["mlp"], h2)
+    x = x + y2
+    if ctx.act_sharding is not None:
+        x = jax.lax.with_sharding_constraint(x, ctx.act_sharding)
+    return x, new_cache, aux
+
+
+def _fresh_mamba_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    return mb.mamba_init_state(cfg, batch, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Stack plans
+
+
+def _stack_plan(cfg: ArchConfig):
+    """Group the layer pattern into scannable segments.
+
+    Returns a list of (kinds_in_group: tuple, n_groups: int).  Homogeneous
+    stacks give [((kind,), L)]; Jamba gives [((k0..k7), L//8)].
+    """
+    kinds = cfg.block_kinds()
+    L = len(kinds)
+    if len(set(kinds)) == 1:
+        return [((kinds[0],), L)]
+    # find smallest period p dividing L such that the pattern repeats
+    for p in range(1, L + 1):
+        if L % p == 0 and all(kinds[i] == kinds[i % p] for i in range(L)):
+            return [(tuple(kinds[:p]), L // p)]
+    return [(tuple(kinds), 1)]  # fully heterogeneous fallback
+
+
+def _init_group(key, kinds, n_groups: int, cfg: ArchConfig, dtype, cross: bool):
+    """Stacked params: tuple over in-group position, stacked over groups."""
+    out = []
+    for i, kind in enumerate(kinds):
+        keys = jax.random.split(jax.random.fold_in(key, i), n_groups)
+        stacked = jax.vmap(lambda k: _block_init(k, kind, cfg, dtype, cross))(keys)
+        out.append(stacked)
+    return tuple(out)
+
+
+def _run_stack(params_groups, kinds, x: jnp.ndarray, cfg: ArchConfig, ctx: Ctx,
+               caches, remat: bool = False):
+    """Scan x through (n_groups x kinds) blocks.
+
+    caches: tuple (per in-group position) of stacked per-group caches, or None.
+    Returns (x, new_caches, total_aux).
+    """
+    has_cache = caches is not None
+
+    def group_body(carry, xs):
+        x, aux = carry
+        p_tuple = xs[0]
+        c_tuple = xs[1] if has_cache else (None,) * len(kinds)
+        new_caches = []
+        for kind, p, c in zip(kinds, p_tuple, c_tuple):
+            x, nc, a = _apply_block(kind, p, x, cfg, ctx, c)
+            aux = aux + a
+            new_caches.append(nc if nc is not None else (c if c is not None else 0))
+        ys = tuple(new_caches) if has_cache else 0
+        return (x, aux), ys
+
+    body = group_body
+    if remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+
+    xs = (params_groups, caches) if has_cache else (params_groups,)
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs,
+                                unroll=True if ctx.unroll else 1)
+    return x, (ys if has_cache else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Model
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = dtype_of(cfg)
+    k_e, k_b, k_h, k_enc, k_f = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": embed_init(k_e, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rms_norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_h, cfg.d_model, cfg.vocab_size, dtype)
+    cross = cfg.encdec is not None and cfg.encdec.cross_attention
+    (kinds, n_groups), = _stack_plan(cfg)
+    params["blocks"] = _init_group(k_b, kinds, n_groups, cfg, dtype, cross)
+    if cfg.encdec is not None:
+        enc_cfg = dataclasses.replace(cfg, sliding_window=None)
+        keys = jax.random.split(k_enc, cfg.encdec.encoder_layers)
+        params["enc_blocks"] = (jax.vmap(
+            lambda k: _block_init(k, BlockKind.ATTN, enc_cfg, dtype, False))(keys),)
+        params["enc_norm"] = rms_norm_init(cfg.d_model, dtype)
+    if cfg.frontend is not None and cfg.frontend.embed_dim != cfg.d_model:
+        params["frontend_proj"] = dense_init(k_f, cfg.frontend.embed_dim, cfg.d_model, dtype)
+    return params
+
+
+def _embed(params, cfg: ArchConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    return params["embed"][tokens]
+
+
+def _unembed(params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["lm_head"]
+
+
+def _encode(params, cfg: ArchConfig, enc_embeds: jnp.ndarray,
+            enc_mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Bidirectional encoder over stub frame embeddings."""
+    x = enc_embeds
+    if "frontend_proj" in params:
+        x = x @ params["frontend_proj"]
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    ctx = Ctx(mode="full", positions=positions, causal=False)
+    enc_cfg = dataclasses.replace(cfg, sliding_window=None)
+    x, _, _ = _run_stack(params["enc_blocks"], (BlockKind.ATTN,), x, enc_cfg, ctx, None)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv_all_layers(params, cfg: ArchConfig, enc_out: jnp.ndarray):
+    """Project encoder output into per-layer cross K/V (stacked over groups)."""
+    (kinds, n_groups), = _stack_plan(cfg)
+    out = []
+    for i, kind in enumerate(kinds):
+        p_stack = params["blocks"][i]
+        kv = jax.vmap(lambda p: attn.project_kv_for_cross(p, enc_out, cfg))(p_stack["cross"])
+        out.append(kv)  # (k,v) each (n_groups, B, T, Hkv, hd)
+    return tuple(out)
+
+
+def model_inputs_to_embeds(params, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
+    """Token and/or stub-frontend embeddings -> (B, S, d)."""
+    if "embeds" in batch:
+        x = batch["embeds"]
+        if "frontend_proj" in params:
+            x = x @ params["frontend_proj"]
+        return x
+    return _embed(params, cfg, batch["tokens"])
+
+
+def forward(params: dict, cfg: ArchConfig, batch: dict,
+            moe_mode: str = "capacity", remat: bool = False,
+            act_sharding: Any = None, unroll: bool = False,
+            attn_impl: str = "dense",
+            moe_dispatch_sharding: Any = None, moe_local_groups: int = 0,
+            moe_group_sharding: Any = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training forward: full sequence -> (logits (B,S,V), moe_aux)."""
+    (kinds, n_groups), = _stack_plan(cfg)
+    enc_out = None
+    if cfg.encdec is not None:
+        enc_out = _encode(params, cfg, batch["enc_embeds"], batch.get("enc_mask"))
+    x = model_inputs_to_embeds(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ctx = Ctx(mode="full", positions=positions, moe_mode=moe_mode,
+              act_sharding=act_sharding, unroll=unroll, attn_impl=attn_impl,
+              moe_dispatch_sharding=moe_dispatch_sharding,
+              moe_local_groups=moe_local_groups,
+              moe_group_sharding=moe_group_sharding)
+
+    if cfg.encdec is not None:
+        # cross-attn K/V precomputed per layer and fed as scan xs
+        ckv = _cross_kv_all_layers(params, cfg, enc_out)
+        x, _, aux = _run_stack_cross(params["blocks"], kinds, x, cfg, ctx, ckv,
+                                     batch.get("enc_mask"), remat)
+    else:
+        x, _, aux = _run_stack(params["blocks"], kinds, x, cfg, ctx, None, remat)
+    return _unembed(params, cfg, x), aux
+
+
+def _run_stack_cross(params_groups, kinds, x, cfg, ctx: Ctx, ckv, enc_mask,
+                     remat: bool = False, caches=None):
+    """Like _run_stack but feeds per-layer cross K/V as extra scan inputs."""
+    has_cache = caches is not None
+
+    def group_body(carry, xs):
+        x, aux = carry
+        p_tuple, kv_tuple = xs[0], xs[1]
+        c_tuple = xs[2] if has_cache else (None,) * len(kinds)
+        new_caches = []
+        for kind, p, kv, c in zip(kinds, p_tuple, kv_tuple, c_tuple):
+            lctx = dataclasses.replace(ctx, cross_kv=kv, cross_mask=enc_mask)
+            x, nc, a = _apply_block(kind, p, x, cfg, lctx, c)
+            aux = aux + a
+            new_caches.append(nc if nc is not None else (c if c is not None else 0))
+        ys = tuple(new_caches) if has_cache else 0
+        return (x, aux), ys
+
+    body = jax.checkpoint(group_body, prevent_cse=False) if remat else group_body
+    xs = (params_groups, ckv, caches) if has_cache else (params_groups, ckv)
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs,
+                                unroll=True if ctx.unroll else 1)
+    return x, (ys if has_cache else None), aux
+
+
+# ---------------------------------------------------------------------------
+# Caches
+
+
+def init_caches(params, cfg: ArchConfig, batch: int, seq_len: int):
+    """Stacked per-group caches matching the stack plan (+ cross-KV slots
+    for enc-dec, filled at prefill)."""
+    dtype = dtype_of(cfg)
+    (kinds, n_groups), = _stack_plan(cfg)
+
+    def one(kind):
+        if kind in (BlockKind.ATTN, BlockKind.ATTN_MOE):
+            return attn.init_kv_cache(cfg, batch, seq_len, dtype)
+        if kind in (BlockKind.MAMBA, BlockKind.MAMBA_MOE):
+            return mb.mamba_init_state(cfg, batch, dtype)
+        return rk.rwkv_init_state(cfg, batch, dtype)
+
+    caches = tuple(
+        jax.tree_util.tree_map(lambda l: jnp.stack([l] * n_groups), one(kind))
+        for kind in kinds)
+    return caches
+
+
+def prefill(params: dict, cfg: ArchConfig, batch: dict, seq_len: int,
+            moe_mode: str = "capacity", act_sharding: Any = None,
+            unroll: bool = False, attn_impl: str = "dense",
+            moe_dispatch_sharding: Any = None):
+    """Run the prompt, returning (last-token logits, caches dict)."""
+    (kinds, n_groups), = _stack_plan(cfg)
+    x = model_inputs_to_embeds(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ctx = Ctx(mode="prefill", positions=positions, moe_mode=moe_mode,
+              act_sharding=act_sharding, unroll=unroll, attn_impl=attn_impl,
+              moe_dispatch_sharding=moe_dispatch_sharding)
+    caches = init_caches(params, cfg, B, seq_len)
+    extra = {}
+    if cfg.encdec is not None:
+        enc_out = _encode(params, cfg, batch["enc_embeds"], batch.get("enc_mask"))
+        ckv = _cross_kv_all_layers(params, cfg, enc_out)
+        x, caches, _ = _run_stack_cross(params["blocks"], kinds, x, cfg, ctx, ckv,
+                                        batch.get("enc_mask"), False, caches)
+        extra["cross_kv"] = ckv
+        if batch.get("enc_mask") is not None:
+            extra["enc_mask"] = batch["enc_mask"]
+    else:
+        x, caches, _ = _run_stack(params["blocks"], kinds, x, cfg, ctx, caches)
+    logits = _unembed(params, cfg, x[:, -1:])
+    return logits, {"layers": caches, **extra}
+
+
+def decode_step(params: dict, cfg: ArchConfig, tokens: jnp.ndarray,
+                pos: jnp.ndarray, caches: dict, moe_mode: str = "capacity",
+                act_sharding: Any = None, unroll: bool = False,
+                cache_update: str = "dus", mixed_precision: bool = False):
+    """ONE-token decode. tokens: (B,1) int32; pos: scalar absolute position."""
+    (kinds, n_groups), = _stack_plan(cfg)
+    x = _embed(params, cfg, tokens)
+    ctx = Ctx(mode="decode", pos=pos, moe_mode=moe_mode,
+              act_sharding=act_sharding, unroll=unroll,
+              cache_update=cache_update, mixed_precision=mixed_precision)
+    if cfg.encdec is not None and "cross_kv" in caches:
+        x, layer_caches, _ = _run_stack_cross(
+            params["blocks"], kinds, x, cfg, ctx, caches["cross_kv"],
+            caches.get("enc_mask"), False, caches["layers"])
+        new = dict(caches)
+        new["layers"] = layer_caches
+    else:
+        x, layer_caches, _ = _run_stack(params["blocks"], kinds, x, cfg, ctx,
+                                        caches["layers"])
+        new = {"layers": layer_caches}
+    logits = _unembed(params, cfg, x)
+    return logits, new

@@ -1,0 +1,7 @@
+from repro.serving import batcher, engine, kvcache, sampling
+from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.engine import ServingEngine
+from repro.serving.kvcache import PagedKVManager
+
+__all__ = ["batcher", "engine", "kvcache", "sampling", "ContinuousBatcher",
+           "Request", "ServingEngine", "PagedKVManager"]

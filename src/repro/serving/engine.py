@@ -1,0 +1,89 @@
+"""Serving engine: compiled prefill/decode steps + generation loop.
+
+This is the "model endpoint" a junctiond function deploys.  It measures
+its own per-step wall time so the FaaS layer can use measured service
+times (CPU, reduced models) or roofline-derived analytic ones (full
+models on the production mesh).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import transformer as T
+from repro.models.frontends import stub_frontend_embeddings
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.kvcache import PagedKVManager
+from repro.serving.sampling import sample
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, *, batch_slots: int = 4,
+                 max_seq_len: int = 256, seed: int = 0):
+        self.cfg = cfg
+        self.max_seq_len = max_seq_len
+        key = jax.random.PRNGKey(seed)
+        self.params = T.init_params(cfg, key)
+        self.kv = PagedKVManager(cfg, batch_slots, max_seq_len)
+        self.batcher = ContinuousBatcher(self.kv, batch_slots)
+        self.caches = None
+        self._rng = jax.random.PRNGKey(seed + 1)
+        self.step_times_s: List[float] = []
+
+        @jax.jit
+        def _prefill(params, tokens):
+            logits, caches = T.prefill(params, cfg, {"tokens": tokens},
+                                       seq_len=max_seq_len)
+            return logits, caches
+
+        @jax.jit
+        def _decode(params, tokens, pos, caches):
+            return T.decode_step(params, cfg, tokens, pos, caches)
+
+        self._prefill = _prefill
+        self._decode = _decode
+
+    # ------------------------------------------------------------------
+    def generate(self, prompts: List[List[int]], max_new_tokens: int = 8,
+                 temperature: float = 0.0) -> List[List[int]]:
+        """Batched greedy/temperature generation (all prompts same length
+        for the compiled shape; the batcher handles slot lifecycle)."""
+        reqs = [self.batcher.submit(p, max_new_tokens) for p in prompts]
+        self.batcher.admit_ready()
+        plen = len(prompts[0])
+        assert all(len(p) == plen for p in prompts), "batch requires equal prompt lengths"
+        tokens = jnp.asarray(prompts, jnp.int32)
+        t0 = time.perf_counter()
+        logits, caches = self._prefill(self.params, tokens)
+        logits.block_until_ready()
+        self.step_times_s.append(time.perf_counter() - t0)
+        pos = plen
+        self._rng, k = jax.random.split(self._rng)
+        next_tok = sample(logits, k, temperature)
+        for slot, r in list(self.batcher.running.items()):
+            self.batcher.record_token(slot, int(next_tok[slot]))
+        while any(not r.done for r in reqs) and pos < self.max_seq_len - 1:
+            t0 = time.perf_counter()
+            logits, caches = self._decode(self.params, next_tok[:, None],
+                                          jnp.int32(pos), caches)
+            logits.block_until_ready()
+            self.step_times_s.append(time.perf_counter() - t0)
+            self._rng, k = jax.random.split(self._rng)
+            next_tok = sample(logits, k, temperature)
+            pos += 1
+            for slot in list(self.batcher.running):
+                self.batcher.record_token(slot, int(next_tok[slot]))
+            if not self.batcher.running:
+                break
+        return [r.generated for r in reqs]
+
+    # ------------------------------------------------------------------
+    def mean_decode_step_us(self) -> float:
+        if len(self.step_times_s) <= 1:
+            return float("nan")
+        return 1e6 * sum(self.step_times_s[1:]) / len(self.step_times_s[1:])

@@ -1,0 +1,20 @@
+"""Token sampling for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jnp.ndarray, key, temperature: float = 0.0,
+           top_k: int = 0) -> jnp.ndarray:
+    """logits: (B, 1, V) or (B, V) -> (B,) int32 tokens."""
+    if logits.ndim == 3:
+        logits = logits[:, -1]
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        kth = vals[:, -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)

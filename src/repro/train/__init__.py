@@ -1,0 +1,8 @@
+from repro.train import checkpoint, data, losses, optimizer, train_loop
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_loop import make_train_step, train
+
+__all__ = ["checkpoint", "data", "losses", "optimizer", "train_loop",
+           "DataConfig", "SyntheticLM", "AdamWConfig", "make_train_step",
+           "train"]

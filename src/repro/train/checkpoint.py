@@ -1,0 +1,58 @@
+"""Checkpointing: flattened-pytree .npz snapshots with step metadata.
+
+No orbax dependency (offline container); supports async-style usage by
+being cheap (np.savez of device-fetched arrays) and atomic (tmp+rename).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, params: Any, opt_state: Any = None, step: int = 0,
+         extra: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    meta = json.dumps({"step": step, **(extra or {})})
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".npz")
+    os.close(fd)
+    np.savez(tmp, __meta__=np.frombuffer(meta.encode(), np.uint8), **payload)
+    os.replace(tmp, path)
+
+
+def restore(path: str, params_template: Any,
+            opt_template: Any = None) -> Tuple[Any, Any, int]:
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        flat_p = {k[len("params/"):]: z[k] for k in z.files if k.startswith("params/")}
+        flat_o = {k[len("opt/"):]: z[k] for k in z.files if k.startswith("opt/")}
+
+    def fill(template, flat):
+        paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            arr = flat[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(arr.astype(leaf.dtype))
+        return treedef.unflatten(leaves)
+
+    params = fill(params_template, flat_p)
+    opt = fill(opt_template, flat_o) if (opt_template is not None and flat_o) else None
+    return params, opt, int(meta["step"])

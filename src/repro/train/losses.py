@@ -1,0 +1,26 @@
+"""LM losses: cross-entropy (+ z-loss) with optional MoE aux loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None,
+                  z_loss_coef: float = 1e-4) -> dict:
+    """logits: (B, S, V); labels: (B, S) int32; mask: (B, S) 1=count."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zl = z_loss_coef * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum((nll + zl) * mask) / denom
+    return {
+        "loss": loss,
+        "nll": jnp.sum(nll * mask) / denom,
+        "ppl_proxy": jnp.exp(jnp.clip(jnp.sum(nll * mask) / denom, 0, 20.0)),
+        "tokens": denom,
+    }

@@ -1,0 +1,59 @@
+"""Training loop: jitted train_step factory + driver."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import transformer as T
+from repro.train.losses import cross_entropy
+from repro.train.optimizer import AdamWConfig, AdamWState, apply_updates, init_state
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    remat: bool = True) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        logits, aux = T.forward(params, cfg, batch, remat=remat)
+        m = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+        return m["loss"] + aux, (m, aux)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        (_, (m, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = apply_updates(opt_cfg, params, grads, opt_state)
+        metrics = {**{k: v for k, v in m.items()}, "moe_aux": aux, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(cfg: ArchConfig, batches: Iterator[Dict], steps: int,
+          opt_cfg: Optional[AdamWConfig] = None, seed: int = 0,
+          log_every: int = 10, checkpoint_path: Optional[str] = None,
+          checkpoint_every: int = 0) -> Dict:
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps)
+    key = jax.random.PRNGKey(seed)
+    params = T.init_params(cfg, key)
+    opt_state = init_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    history = []
+    t0 = time.perf_counter()
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["elapsed_s"] = time.perf_counter() - t0
+            history.append(m)
+            print(f"step {step:5d} loss={m['loss']:.4f} nll={m['nll']:.4f} "
+                  f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e}")
+        if checkpoint_path and checkpoint_every and (step + 1) % checkpoint_every == 0:
+            from repro.train.checkpoint import save
+            save(checkpoint_path, params, opt_state, step=step + 1)
+    return {"params": params, "opt_state": opt_state, "history": history}

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# tests must see ONE device (the dry-run sets 512 only in its own entry
+# point); make sure nothing leaked in.
+os.environ.pop("XLA_FLAGS", None)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

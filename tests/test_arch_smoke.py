@@ -1,0 +1,102 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED
+variant of each family (2 layers, d_model<=512, <=4 experts) runs one
+forward + one train step on CPU; output shapes asserted, no NaNs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import get_arch, reduced
+from repro.configs import ASSIGNED
+from repro.models import transformer as T
+from repro.models.frontends import stub_frontend_embeddings
+from repro.train.losses import cross_entropy
+from repro.train.optimizer import AdamWConfig, apply_updates, init_state
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+MODEL_ARCHS = [a for a in ASSIGNED]
+
+
+def _smoke_cfg(name):
+    cfg = reduced(get_arch(name))
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+def _batch(cfg, with_labels=False):
+    batch = {}
+    if cfg.frontend is not None and cfg.encdec is None:
+        batch["embeds"] = jax.random.normal(KEY, (B, S, cfg.frontend.embed_dim), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    if cfg.encdec is not None:
+        batch["enc_embeds"] = stub_frontend_embeddings(cfg, KEY, B)
+    if with_labels:
+        batch["labels"] = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", MODEL_ARCHS)
+def test_reduced_forward(arch):
+    cfg = _smoke_cfg(arch)
+    assert cfg.n_layers == 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    params = T.init_params(cfg, KEY)
+    logits, aux = T.forward(params, cfg, _batch(cfg))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not jnp.isnan(logits).any()
+    assert not jnp.isnan(aux)
+
+
+@pytest.mark.parametrize("arch", MODEL_ARCHS)
+def test_reduced_train_step(arch):
+    cfg = _smoke_cfg(arch)
+    params = T.init_params(cfg, KEY)
+    opt = init_state(params)
+    batch = _batch(cfg, with_labels=True)
+
+    def loss_fn(p):
+        logits, aux = T.forward(p, cfg, batch)
+        return cross_entropy(logits, batch["labels"])["loss"] + aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_params, opt, m = apply_updates(AdamWConfig(), params, grads, opt)
+    assert jnp.isfinite(loss)
+    assert jnp.isfinite(m["grad_norm"])
+    # at least one parameter must actually move
+    moved = any(
+        not jnp.allclose(a, b)
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", MODEL_ARCHS)
+def test_reduced_prefill_decode_consistency(arch):
+    """decode_step after prefill must reproduce the full-forward logits
+    for the next position (the KV-cache correctness invariant)."""
+    cfg = _smoke_cfg(arch)
+    params = T.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    # full forward over S tokens
+    logits_full, _ = T.forward(params, cfg, batch, moe_mode="dense")
+    # prefill S-1 tokens, then decode token S-1
+    if "tokens" in batch:
+        pre = dict(batch)
+        pre["tokens"] = batch["tokens"][:, :-1]
+        last_tok = batch["tokens"][:, -1:]
+    else:  # VLM: embeds prompt — decode takes tokens, so skip strictness
+        pytest.skip("decode consistency needs token inputs (VLM uses embeds)")
+    lg_pre, caches = T.prefill(params, cfg, pre, seq_len=S + 2, moe_mode="dense")
+    lg_dec, _ = T.decode_step(params, cfg, last_tok, jnp.int32(S - 1), caches,
+                              moe_mode="dense")
+    a = logits_full[:, -1]
+    b = lg_dec[:, 0]
+    assert jnp.max(jnp.abs(a - b)) < 2e-2, float(jnp.max(jnp.abs(a - b)))
+    # prefill's own last logits must match forward at position S-2
+    c = logits_full[:, -2]
+    d = lg_pre[:, 0]
+    assert jnp.max(jnp.abs(c - d)) < 2e-2, float(jnp.max(jnp.abs(c - d)))

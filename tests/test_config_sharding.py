@@ -1,0 +1,131 @@
+"""Config registry, reduced-variant contract, sharding rule engine, and
+HLO collective parser units (no 512-device init needed here)."""
+import dataclasses
+
+import jax
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+import numpy as np
+
+from repro.analysis.hlo_parse import parse_collectives
+from repro.config import ALL_SHAPES, StepKind, get_arch, list_archs, reduced
+from repro.configs import ASSIGNED
+from repro.distributed import sharding as sh
+from repro.models import transformer as T
+
+
+def test_registry_has_all_assigned_archs():
+    archs = list_archs()
+    for a in ASSIGNED:
+        assert a in archs
+    assert "paper-aes-600b" in archs
+    assert len(ASSIGNED) == 10
+
+
+def test_all_configs_cite_sources():
+    for a in ASSIGNED:
+        assert get_arch(a).citation, a
+
+
+def test_assigned_shapes():
+    names = [s.name for s in ALL_SHAPES]
+    assert names == ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    by = {s.name: s for s in ALL_SHAPES}
+    assert by["train_4k"].step == StepKind.TRAIN
+    assert by["decode_32k"].step == StepKind.DECODE
+    assert by["long_500k"].global_batch == 1
+    assert by["long_500k"].seq_len == 524_288
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_contract(arch):
+    r = reduced(get_arch(arch))
+    assert r.n_layers == 2
+    assert r.d_model <= 512
+    if r.moe:
+        assert r.moe.num_experts <= 4
+    r.validate()
+
+
+def test_exact_assigned_hyperparams():
+    m = get_arch("mixtral-8x7b")
+    assert (m.n_layers, m.d_model, m.n_heads, m.n_kv_heads, m.d_ff,
+            m.vocab_size) == (32, 4096, 32, 8, 14336, 32000)
+    assert m.moe.num_experts == 8 and m.moe.top_k == 2 and m.sliding_window
+    d = get_arch("deepseek-67b")
+    assert (d.n_layers, d.d_model, d.n_heads, d.n_kv_heads) == (95, 8192, 64, 8)
+    j = get_arch("jamba-v0.1-52b")
+    kinds = j.block_kinds()
+    # 1 attention block per 8, MoE every other block
+    assert sum(1 for k in kinds if k.value.startswith("attn")) == 4
+    assert sum(1 for k in kinds if "moe" in k.value) == 16
+    r = get_arch("rwkv6-1.6b")
+    assert r.is_attention_free and r.supports_long_context_natively
+
+
+# ---------------------------------------------------------------------------
+class _Mesh16:
+    """Duck-typed 16x16 mesh for spec computation (no devices needed)."""
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def test_param_specs_divisibility_safe():
+    """Every emitted spec must divide its dim (the engine's core contract),
+    checked on real eval_shape trees for all archs."""
+    for arch in ASSIGNED:
+        cfg = get_arch(arch)
+        shapes = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                                jax.random.PRNGKey(0))
+        specs = sh.param_specs(cfg, _Mesh16(), training=True)
+        flat_s, _ = jax.tree_util.tree_flatten(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        flat_l = jax.tree_util.tree_leaves(shapes)
+        assert len(flat_s) == len(flat_l)
+        for spec, leaf in zip(flat_s, flat_l):
+            for dim, ax in zip(leaf.shape, tuple(spec)):
+                if ax is None:
+                    continue
+                n = 1
+                for a in ((ax,) if isinstance(ax, str) else ax):
+                    n *= 16
+                assert dim % n == 0, (arch, leaf.shape, spec)
+
+
+def test_seamless_vocab_fallback():
+    """vocab 256206 is not divisible by 16 -> lm_head must NOT shard vocab."""
+    cfg = get_arch("seamless-m4t-large-v2")
+    specs = sh.param_specs(cfg, _Mesh16(), training=False)
+    lm = specs["lm_head"]
+    assert tuple(lm) != (None, "model")
+
+
+def test_cache_specs_long_context_batch1():
+    """long_500k (batch=1): the sequence dim must absorb the dp axes."""
+    cfg = get_arch("h2o-danube-3-4b")   # SWA, cap = 4096
+    tree = jax.eval_shape(lambda: T.init_caches(None, cfg, 1, 524_288))
+    specs = sh.cache_specs_for({"layers": tree}, cfg, _Mesh16(), batch=1)
+    k_spec = specs["layers"][0]["k"]
+    assert k_spec[1] is None            # batch unshardable
+    seq_axes = k_spec[2]
+    assert seq_axes is not None         # dp landed on the sequence dim
+    flat = (seq_axes,) if isinstance(seq_axes, str) else tuple(seq_axes)
+    assert "data" in flat
+
+
+# ---------------------------------------------------------------------------
+def test_hlo_collective_parser():
+    txt = """
+  %ag = bf16[16,1024]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[256]{0} all-reduce(%x), replica_groups={{0,1}}, to_apply=%sum
+  %cp = bf16[8,8]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+  %noise = f32[4]{0} add(%a, %b)
+"""
+    stats = parse_collectives(txt)
+    assert stats.counts == {"all-gather": 1, "all-reduce": 1,
+                            "collective-permute": 1}
+    ag = 16 * 1024 * 2 * 3 / 4
+    ar = 256 * 4 * 2 * 0.5
+    cp = 8 * 8 * 2
+    assert stats.bytes_per_chip == pytest.approx(ag + ar + cp)

@@ -1,0 +1,79 @@
+"""Units for the dry-run machinery that don't need 512 devices: input
+specs, probe layer counts, serving variants, roofline extrapolation."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.roofline import ProbePoint, build_roofline, extrapolate
+from repro.config import get_arch, get_shape
+from repro.configs import ASSIGNED
+
+# importing dryrun after jax is initialised is safe (env var no-op)
+from repro.launch.dryrun import (cache_template, input_specs,
+                                 probe_layer_counts, serving_variant,
+                                 with_layers)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k",
+                                        "decode_32k", "long_500k"])
+def test_input_specs_cover_all_pairs(arch, shape_name):
+    cfg0 = get_arch(arch)
+    shape = get_shape(shape_name)
+    cfg, note = serving_variant(cfg0, shape)
+    specs = input_specs(cfg, shape)
+    B = shape.global_batch
+    if shape_name in ("decode_32k", "long_500k"):
+        assert specs["tokens"].shape == (B, 1)
+        # the decode cache: ONE token against seq_len of context
+        tpl = cache_template(cfg, B, shape.seq_len)
+        leaves = jax.tree_util.tree_leaves(tpl)
+        assert leaves, arch
+        # no allocation: everything is ShapeDtypeStruct
+        assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    else:
+        key = "embeds" if (cfg.frontend and not cfg.encdec) else "tokens"
+        assert specs[key].shape[0] == B
+        assert specs[key].shape[1] == shape.seq_len
+    if cfg.encdec is not None and shape_name not in ("decode_32k", "long_500k"):
+        assert specs["enc_embeds"].shape[1] == cfg.encdec.max_source_positions
+    if shape.step.value == "train_step":
+        assert specs["labels"].shape == (B, shape.seq_len)
+
+
+def test_long_context_policy():
+    """SSM/hybrid/SWA run long_500k natively; full-attention archs get the
+    documented SWA serving variant."""
+    long = get_shape("long_500k")
+    for arch in ("rwkv6-1.6b", "jamba-v0.1-52b", "mixtral-8x7b",
+                 "h2o-danube-3-4b"):
+        _, note = serving_variant(get_arch(arch), long)
+        assert note == "", arch
+    for arch in ("qwen3-1.7b", "deepseek-67b", "phi4-mini-3.8b",
+                 "pixtral-12b"):
+        cfg, note = serving_variant(get_arch(arch), long)
+        assert "swa-serving-variant" in note, arch
+        assert cfg.sliding_window == 4096
+
+
+def test_probe_layer_counts():
+    assert probe_layer_counts(get_arch("qwen3-1.7b")) == (2, 4)
+    assert probe_layer_counts(get_arch("jamba-v0.1-52b")) == (8, 16)
+
+
+def test_with_layers_scales_encoder_too():
+    cfg = with_layers(get_arch("seamless-m4t-large-v2"), 2)
+    assert cfg.n_layers == 2 and cfg.encdec.encoder_layers == 2
+
+
+def test_roofline_extrapolation_linear():
+    pa = ProbePoint(layers=2, flops=10.0, bytes_accessed=100.0, coll_bytes=4.0)
+    pb = ProbePoint(layers=4, flops=18.0, bytes_accessed=160.0, coll_bytes=6.0)
+    tot = extrapolate(pa, pb, layers=10)
+    assert tot["flops"] == pytest.approx(2 + 4 * 10)     # base 2 + 4/layer
+    assert tot["bytes"] == pytest.approx(40 + 30 * 10)
+    assert tot["coll"] == pytest.approx(2 + 1 * 10)
+    roof = build_roofline("a", "s", "m", 256, tot, model_flops=1e12)
+    assert roof.bottleneck in ("compute", "memory", "collective")
+    assert roof.step_time_s == max(roof.compute_s, roof.memory_s,
+                                   roof.collective_s)

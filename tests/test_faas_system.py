@@ -1,0 +1,158 @@
+"""End-to-end behaviour tests for the paper's system: the junctiond FaaS
+runtime vs the containerd baseline, the centralized scheduler's scaling
+property, provider caching, and cold starts."""
+import pytest
+
+from repro.core import (FaasdRuntime, FunctionSpec, JunctionInstance,
+                        LatencySummary, PollingModel, Simulator,
+                        run_sequential)
+from repro.core.latency import (CONTAINERD_COLDSTART_MS,
+                                JUNCTION_INSTANCE_INIT_MS)
+from repro.core.scheduler import JunctionScheduler
+from repro.core.resources import CorePool
+from repro.core.latency import JUNCTION_RUNTIME
+
+
+def _runtime(backend, seed=0, **kw):
+    sim = Simulator(seed=seed)
+    rt = FaasdRuntime(sim, backend=backend, **kw)
+    rt.deploy_blocking(FunctionSpec(name="aes"))
+    return rt
+
+
+# ---------------------------------------------------------------------------
+# Paper-claim validation (Fig 5): the central reproduction gates.
+
+
+def _fig5(backend, seeds=range(5)):
+    e2e, ex = [], []
+    for s in seeds:
+        rt = _runtime(backend, seed=s)
+        summ = run_sequential(rt, "aes", n=100)
+        e2e.append(summ)
+        ex.append(LatencySummary.of(rt.exec_latencies_ms()))
+    import numpy as np
+    med = float(np.mean([s.median_ms for s in e2e]))
+    p99 = float(np.mean([s.p99_ms for s in e2e]))
+    exm = float(np.mean([s.median_ms for s in ex]))
+    exp = float(np.mean([s.p99_ms for s in ex]))
+    return med, p99, exm, exp
+
+
+def test_fig5_median_reduction_matches_paper():
+    """Paper: junctiond reduces median e2e latency by 37.33%."""
+    cm, _, _, _ = _fig5("containerd")
+    jm, _, _, _ = _fig5("junctiond")
+    reduction = 100 * (1 - jm / cm)
+    assert 30.0 <= reduction <= 46.0, f"median reduction {reduction:.1f}% (paper: 37.33%)"
+
+
+def test_fig5_p99_reduction_matches_paper():
+    """Paper: junctiond reduces P99 e2e latency by 63.42%."""
+    _, cp, _, _ = _fig5("containerd")
+    _, jp, _, _ = _fig5("junctiond")
+    reduction = 100 * (1 - jp / cp)
+    assert 50.0 <= reduction <= 78.0, f"p99 reduction {reduction:.1f}% (paper: 63.42%)"
+
+
+def test_fig5_exec_latency_reduction_matches_paper():
+    """Paper: function execution median -35.3%, P99 -81%."""
+    _, _, cem, cep = _fig5("containerd")
+    _, _, jem, jep = _fig5("junctiond")
+    med_red = 100 * (1 - jem / cem)
+    p99_red = 100 * (1 - jep / cep)
+    assert 28.0 <= med_red <= 43.0, f"exec median reduction {med_red:.1f}% (paper 35.3%)"
+    assert 60.0 <= p99_red <= 95.0, f"exec p99 reduction {p99_red:.1f}% (paper 81%)"
+
+
+# ---------------------------------------------------------------------------
+# Cold start (paper §5: Junction instance init = 3.4 ms).
+
+
+def test_cold_start_junction_vs_containerd():
+    sim = Simulator()
+    rt = FaasdRuntime(sim, backend="junctiond")
+    t0 = sim.now
+    rt.deploy_blocking(FunctionSpec(name="f1"))
+    junction_cold = sim.now - t0
+    assert junction_cold == pytest.approx(JUNCTION_INSTANCE_INIT_MS * 1e-3, rel=0.01)
+
+    sim2 = Simulator()
+    rt2 = FaasdRuntime(sim2, backend="containerd")
+    t0 = sim2.now
+    rt2.deploy_blocking(FunctionSpec(name="f1"))
+    containerd_cold = sim2.now - t0
+    assert containerd_cold == pytest.approx(CONTAINERD_COLDSTART_MS * 1e-3, rel=0.01)
+    assert containerd_cold / junction_cold > 50   # orders of magnitude
+
+
+# ---------------------------------------------------------------------------
+# Scheduler scalability (paper §3: polling cost ∝ cores, not instances).
+
+
+def test_centralized_polling_cost_independent_of_instances():
+    def polling_cost(n_instances):
+        sim = Simulator()
+        pool = CorePool(sim, 10, JUNCTION_RUNTIME)
+        sched = JunctionScheduler(sim, pool)
+        for i in range(n_instances):
+            inst = JunctionInstance(sim, f"f{i}")
+            inst.ready = True
+            sched.register(inst)
+        sched.run()
+        sim.run(until=0.05)
+        return sched.polling_cost_per_iteration()
+
+    c10, c1000 = polling_cost(10), polling_cost(1000)
+    # idle instances must not add polling work: cost stays ~constant
+    assert c1000 <= c10 * 2.0, (c10, c1000)
+
+
+def test_per_instance_polling_consumes_cores():
+    """Naive DPDK-style: every isolated instance burns one polling core."""
+    sim = Simulator()
+    pool = CorePool(sim, 10, JUNCTION_RUNTIME)
+    sched = JunctionScheduler(sim, pool, PollingModel.PER_INSTANCE)
+    for i in range(8):
+        inst = JunctionInstance(sim, f"f{i}")
+        sched.register(inst)
+    assert pool.n_cores == 2              # 8 of 10 cores lost to polling
+    assert sched.polling_cores_reserved == 8
+    # centralized scheduler reserves exactly ONE core regardless
+    sim2 = Simulator()
+    pool2 = CorePool(sim2, 10, JUNCTION_RUNTIME)
+    sched2 = JunctionScheduler(sim2, pool2)
+    for i in range(8):
+        inst = JunctionInstance(sim2, f"f{i}")
+        sched2.register(inst)
+    assert pool2.n_cores == 9
+    assert sched2.polling_cores_reserved == 1
+
+
+# ---------------------------------------------------------------------------
+# Provider metadata cache (paper §4).
+
+
+def test_provider_cache_removes_backend_query():
+    rt = _runtime("containerd")
+    run_sequential(rt, "aes", n=20)
+    assert rt.cache_hits == 20
+    assert rt.cache_misses == 0
+
+    sim = Simulator()
+    rt2 = FaasdRuntime(sim, backend="containerd", provider_cache=False)
+    rt2.deploy_blocking(FunctionSpec(name="aes"))
+    s_nocache = run_sequential(rt2, "aes", n=20)
+    assert rt2.cache_misses == 20
+
+    s_cache = run_sequential(_runtime("containerd"), "aes", n=20)
+    # the containerd query (1.8ms) lands on the critical path without cache
+    assert s_nocache.median_ms > s_cache.median_ms + 1.0
+
+
+def test_invocation_records_are_complete():
+    rt = _runtime("junctiond")
+    run_sequential(rt, "aes", n=10)
+    assert len(rt.records) == 10
+    for r in rt.records:
+        assert r.t_done > r.t_end_exec > r.t_start_exec > r.t_arrival

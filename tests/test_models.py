@@ -1,0 +1,179 @@
+"""Model-layer unit + property tests: scan utilities vs sequential oracle,
+MoE capacity vs dense oracle, SWA ring-buffer equivalence, RoPE/mask
+invariants, analytic vs actual parameter counts."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.config import get_arch, list_archs, reduced
+from repro.models import moe as moe_mod
+from repro.models import transformer as T
+from repro.models.attention import causal_mask
+from repro.models.layers import apply_rope
+from repro.models.scan_utils import linear_scan_emit, linear_scan_ref
+
+
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(
+    T_=st.sampled_from([8, 16, 32, 64, 128]),
+    chunk=st.sampled_from([4, 8, 16, 32, 64]),
+    seed=st.integers(0, 10_000),
+)
+def test_property_chunked_scan_matches_sequential(T_, chunk, seed):
+    """PROPERTY: the chunked associative scan == the sequential recurrence
+    for any chunking."""
+    key = jax.random.PRNGKey(seed)
+    ka, kb, kh = jax.random.split(key, 3)
+    a = jax.nn.sigmoid(jax.random.normal(ka, (T_, 4, 3)))
+    b = jax.random.normal(kb, (T_, 4, 3)) * 0.3
+    h0 = jax.random.normal(kh, (4, 3))
+
+    def make_ab(cin):
+        return cin
+
+    def emit(h_prev, h_post, cin):
+        return h_post
+
+    hs, h_last = linear_scan_emit((a, b), h0, make_ab, emit, chunk=chunk)
+    hs_ref, h_ref = linear_scan_ref(a, b, h0)
+    np.testing.assert_allclose(hs, hs_ref, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(h_last, h_ref, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+def test_moe_capacity_matches_dense_with_ample_capacity():
+    cfg = dataclasses.replace(reduced(get_arch("mixtral-8x7b")), dtype="float32")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (24, cfg.d_model))
+    y_dense, aux_d = moe_mod.moe_dense_ref(params, x, cfg)
+    y_cap, aux_c = moe_mod.moe_capacity(params, x, cfg)
+    np.testing.assert_allclose(y_cap, y_dense, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(aux_c, aux_d, atol=1e-6)
+
+
+def test_moe_capacity_drops_overflow_tokens():
+    cfg = dataclasses.replace(reduced(get_arch("mixtral-8x7b")), dtype="float32")
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, cfg.d_model))
+    y, _ = moe_mod.moe_capacity(params, x, cfg, capacity=1)
+    assert jnp.isfinite(y).all()
+    # with capacity 1 per expert most tokens are dropped -> smaller norm
+    y_full, _ = moe_mod.moe_capacity(params, x, cfg, capacity=64)
+    assert float(jnp.linalg.norm(y)) < float(jnp.linalg.norm(y_full))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), t=st.sampled_from([4, 16, 33]))
+def test_property_moe_router_weights_normalised(seed, t):
+    """PROPERTY: per-token selected router weights sum to 1."""
+    cfg = dataclasses.replace(reduced(get_arch("phi3.5-moe-42b-a6.6b")), dtype="float32")
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (t, cfg.d_model))
+    w, idx, _ = moe_mod._route(params, x, cfg)
+    np.testing.assert_allclose(jnp.sum(w, -1), jnp.ones(t), atol=1e-5)
+    assert int(idx.max()) < cfg.moe.num_experts
+
+
+# ---------------------------------------------------------------------------
+def test_swa_ring_buffer_matches_full_cache():
+    """A sliding-window arch decoding with its ring buffer must match the
+    same model decoding with sliding-window masking over a full cache."""
+    cfg = dataclasses.replace(reduced(get_arch("h2o-danube-3-4b")), dtype="float32")
+    cfg = dataclasses.replace(cfg, sliding_window=8, max_seq_len=64)
+    cfg_full = dataclasses.replace(cfg, sliding_window=None)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    S = 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab_size)
+    logits_swa, _ = T.forward(params, cfg, {"tokens": toks})
+    # manual full attention with window mask (oracle)
+    logits_full, _ = T.forward(params, cfg_full, {"tokens": toks})
+    # they differ (window matters) ...
+    assert float(jnp.max(jnp.abs(logits_swa - logits_full))) > 1e-3
+    # ... but SWA prefill+decode vs SWA forward agree (ring correctness)
+    pre = {"tokens": toks[:, :-1]}
+    _, caches = T.prefill(params, cfg, pre, seq_len=S + 4)
+    lg, _ = T.decode_step(params, cfg, toks[:, -1:], jnp.int32(S - 1), caches)
+    np.testing.assert_allclose(lg[:, 0], logits_swa[:, -1], atol=2e-2, rtol=2e-2)
+
+
+def test_causal_mask_properties():
+    m = causal_mask(6, 6)
+    assert bool(m[0, 0]) and not bool(m[0, 1])
+    assert m.sum() == 21
+    mw = causal_mask(6, 6, window=2)
+    assert not bool(mw[5, 3]) and bool(mw[5, 4]) and bool(mw[5, 5])
+    mo = causal_mask(2, 6, q_offset=4)
+    assert bool(mo[0, 4]) and not bool(mo[0, 5]) and bool(mo[1, 5])
+
+
+def test_rope_preserves_norm_and_relativity():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 4, 2, 64))
+    pos = jnp.arange(4)[None]
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1),
+                               jnp.linalg.norm(y, axis=-1), atol=1e-4)
+    # relative property: <q_m, k_n> depends only on m-n
+    q = jax.random.normal(key, (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 64))
+    def score(m, n):
+        qm = apply_rope(q, jnp.array([[m]]), 10_000.0)
+        kn = apply_rope(k, jnp.array([[n]]), 10_000.0)
+        return float(jnp.sum(qm * kn))
+    assert score(3, 1) == pytest.approx(score(10, 8), abs=1e-3)
+    assert score(3, 1) != pytest.approx(score(10, 5), abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,expected_b", [
+    ("mixtral-8x7b", 46.7), ("deepseek-67b", 67.4), ("qwen3-1.7b", 1.72),
+    ("jamba-v0.1-52b", 51.6), ("phi3.5-moe-42b-a6.6b", 41.9),
+])
+def test_param_counts_match_published(arch, expected_b):
+    from repro.models.flops import param_count
+    n = param_count(get_arch(arch)) / 1e9
+    assert n == pytest.approx(expected_b, rel=0.02), n
+
+
+def test_active_params_match_model_cards():
+    from repro.models.flops import active_param_count
+    assert active_param_count(get_arch("phi3.5-moe-42b-a6.6b")) / 1e9 == pytest.approx(6.6, rel=0.05)
+    assert active_param_count(get_arch("mixtral-8x7b")) / 1e9 == pytest.approx(12.9, rel=0.05)
+    assert active_param_count(get_arch("jamba-v0.1-52b")) / 1e9 == pytest.approx(12.1, rel=0.05)
+
+
+def test_chunked_attention_matches_dense():
+    """The flash-style XLA attention (§Perf memory optimization) must be
+    numerically identical to the dense oracle."""
+    from repro.models.attention import chunked_gqa_attend, gqa_attend
+    key = jax.random.PRNGKey(0)
+    for (B, S, T_, Hq, Hkv, hd, win, cq) in [
+            (2, 64, 64, 4, 2, 32, None, 16), (1, 96, 96, 8, 8, 64, 24, 32)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, Hq, hd))
+        k = jax.random.normal(ks[1], (B, T_, Hkv, hd))
+        v = jax.random.normal(ks[2], (B, T_, Hkv, hd))
+        a = chunked_gqa_attend(q, k, v, causal=True, window=win, q_chunk=cq)
+        b = gqa_attend(q, k, v, causal_mask(S, T_, window=win))
+        np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+def test_moe_local_dispatch_matches_oracle():
+    """Per-shard local dispatch (§Perf 'moe_local') == dense oracle with
+    ample capacity."""
+    cfg = dataclasses.replace(reduced(get_arch("mixtral-8x7b")), dtype="float32")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model))
+    yd, _ = moe_mod.moe_dense_ref(params, x, cfg)
+    yg, _ = moe_mod.moe_capacity_grouped(params, x, cfg, n_groups=4, capacity=32)
+    np.testing.assert_allclose(yg, yd, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,64 @@
+"""Multi-tenant hosting + autoscaler behaviour (paper §1/§2.1/§3)."""
+from repro.core import FaasdRuntime, FunctionSpec, Simulator
+from repro.core.autoscaler import Autoscaler, ScalePolicy
+from repro.core.multitenant import run_zipf_workload
+from repro.core.scheduler import PollingModel
+
+
+def test_centralized_hosts_more_functions_than_per_instance():
+    cen = run_zipf_workload("junctiond", n_functions=64, total_rps=600,
+                            duration_s=0.4)
+    per = run_zipf_workload("junctiond", n_functions=64, total_rps=600,
+                            duration_s=0.4, polling=PollingModel.PER_INSTANCE)
+    assert cen.hosted == 64
+    assert per.hosted < 64                      # polling cores exhausted
+    assert cen.cores_for_work > per.cores_for_work
+
+
+def test_cold_tier_latency_not_penalised():
+    """Rarely-invoked functions must not pay a polling/wakeup tax under the
+    centralized scheduler (the paper's density argument)."""
+    r = run_zipf_workload("junctiond", n_functions=32, total_rps=1000,
+                          duration_s=0.6)
+    assert r.cold_tier.n > 0
+    assert r.cold_tier.median_ms < r.overall.median_ms * 1.5
+
+
+def test_autoscaler_scales_up_and_down():
+    sim = Simulator(seed=0)
+    rt = FaasdRuntime(sim, backend="junctiond")
+    rt.deploy_blocking(FunctionSpec(name="f", work_us=2000.0, max_cores=8))
+    asc = Autoscaler(sim, rt, ScalePolicy(period_s=0.05,
+                                          target_inflight_per_replica=2.0))
+    asc.run()
+
+    def burst():
+        for _ in range(600):
+            yield sim.timeout(0.0001)           # 10k rps burst of 2ms calls
+
+            def one():
+                asc.on_arrival("f")
+                yield from rt.invoke("f")
+                asc.on_done("f")
+
+            sim.process(one())
+
+    sim.process(burst())
+    sim.run(until=1.0)
+    ups = [e for e in asc.scale_events if e[3] > e[2]]
+    downs = [e for e in asc.scale_events if e[3] < e[2]]
+    assert ups, "autoscaler never scaled up under a 2000rps burst"
+    assert downs, "autoscaler never scaled back down after the burst"
+    assert asc.replicas["f"] >= 1
+
+
+def test_autoscaler_respects_bounds():
+    sim = Simulator(seed=0)
+    rt = FaasdRuntime(sim, backend="junctiond")
+    rt.deploy_blocking(FunctionSpec(name="f"))
+    pol = ScalePolicy(min_replicas=1, max_replicas=4, period_s=0.02)
+    asc = Autoscaler(sim, rt, pol)
+    asc.run()
+    asc.inflight["f"] = 10_000                  # absurd load
+    sim.run(until=1.0)
+    assert asc.replicas["f"] <= 4

@@ -1,0 +1,123 @@
+"""Unit + property tests for the discrete-event engine."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.simulator import Simulator
+
+
+def test_timeout_ordering():
+    sim = Simulator()
+    seen = []
+    for d in (0.5, 0.1, 0.3):
+        def make(d=d):
+            def p():
+                yield sim.timeout(d)
+                seen.append(d)
+            return p
+        sim.process(make()())
+    sim.run()
+    assert seen == [0.1, 0.3, 0.5]
+    assert sim.now == pytest.approx(0.5)
+
+
+def test_event_value_passing():
+    sim = Simulator()
+    ev = sim.event()
+    got = []
+
+    def waiter():
+        v = yield ev
+        got.append(v)
+
+    sim.process(waiter())
+
+    def trigger():
+        yield sim.timeout(1.0)
+        ev.succeed("payload")
+
+    sim.process(trigger())
+    sim.run()
+    assert got == ["payload"]
+
+
+def test_queue_fifo_and_blocking():
+    sim = Simulator()
+    order = []
+
+    def consumer(name):
+        while True:
+            item = yield sim.queue_ref.get()
+            order.append((name, item))
+
+    sim.queue_ref = sim.queue()
+
+    def producer():
+        for i in range(4):
+            yield sim.timeout(0.1)
+            sim.queue_ref.put(i)
+
+    sim.process(consumer("c"))
+    sim.process(producer())
+    sim.run(until=10.0)
+    assert [i for _, i in order] == [0, 1, 2, 3]
+
+
+def test_process_completion_event():
+    sim = Simulator()
+
+    def inner():
+        yield sim.timeout(2.0)
+        return 42
+
+    def outer(results):
+        p = sim.process(inner())
+        v = yield p.completion
+        results.append(v)
+
+    results = []
+    sim.process(outer(results))
+    sim.run()
+    assert results == [42]
+
+
+@settings(max_examples=50, deadline=None)
+@given(delays=st.lists(st.floats(min_value=0.0, max_value=100.0,
+                                 allow_nan=False), min_size=1, max_size=40))
+def test_property_event_time_monotonic(delays):
+    """PROPERTY: simulation time never goes backwards and every scheduled
+    callback fires exactly once."""
+    sim = Simulator()
+    fired = []
+
+    def make(d):
+        def p():
+            yield sim.timeout(d)
+            fired.append((d, sim.now))
+        return p
+
+    for d in delays:
+        sim.process(make(d)())
+    sim.run()
+    assert len(fired) == len(delays)
+    times = [t for _, t in sorted(fired)]
+    assert all(t2 >= t1 for t1, t2 in zip(times, times[1:]))
+    assert sim.now == pytest.approx(max(delays))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_property_determinism(seed):
+    """PROPERTY: identical seeds produce bit-identical latency traces."""
+    from repro.core import FaasdRuntime, FunctionSpec, run_sequential
+
+    def run():
+        sim = Simulator(seed=seed)
+        rt = FaasdRuntime(sim, backend="junctiond")
+        rt.deploy_blocking(FunctionSpec(name="aes"))
+        return run_sequential(rt, "aes", n=10)
+
+    a, b = run(), run()
+    assert a.median_ms == b.median_ms
+    assert a.p99_ms == b.p99_ms

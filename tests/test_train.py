@@ -1,0 +1,91 @@
+"""Training substrate: optimizer semantics, checkpoint round-trip, loss
+decreases on structured synthetic data, data-pipeline determinism."""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.config import get_arch, reduced
+from repro.models import transformer as T
+from repro.train import AdamWConfig, DataConfig, SyntheticLM, train
+from repro.train.checkpoint import restore, save
+from repro.train.optimizer import apply_updates, global_norm, init_state, lr_schedule
+
+
+def _cfg():
+    return dataclasses.replace(reduced(get_arch("h2o-danube-3-4b")), dtype="float32")
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.full((4, 4), 1e6)}
+    state = init_state(params)
+    cfg = AdamWConfig(grad_clip=1.0, lr=0.1, warmup_steps=0, weight_decay=0.0)
+    _, _, m = apply_updates(cfg, params, grads, state)
+    assert m["grad_norm"] > 1e6  # reported norm is pre-clip
+    clipped = grads["w"] * jnp.minimum(1.0, 1.0 / m["grad_norm"])
+    assert float(global_norm({"w": clipped})) <= 1.0 + 1e-5
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9          # warmup ascending
+    assert lrs[-1] == pytest.approx(1e-4, rel=0.1)  # decays to min ratio
+    assert max(lrs) <= 1e-3 + 1e-9
+
+
+def test_checkpoint_roundtrip():
+    cfg = _cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_state(params)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.npz")
+        save(path, params, opt, step=17)
+        p2, o2, step = restore(path, params, opt)
+        assert step == 17
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(opt),
+                        jax.tree_util.tree_leaves(o2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_loss_decreases_on_synthetic_data():
+    cfg = _cfg()
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, batch_size=4, seed=1)
+    res = train(cfg, SyntheticLM(dc).batches(), steps=25,
+                opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=25),
+                log_every=24)
+    hist = res["history"]
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.8
+
+
+def test_data_pipeline_determinism_and_sharding():
+    dc = DataConfig(vocab_size=1000, seq_len=64, batch_size=2, seed=7)
+    a = next(SyntheticLM(dc, shard=0).batches())
+    b = next(SyntheticLM(dc, shard=0).batches())
+    c = next(SyntheticLM(dc, shard=1).batches())
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # next-token alignment invariant
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1000), zipf=st.floats(1.01, 2.0))
+def test_property_synthetic_tokens_in_vocab(seed, zipf):
+    """PROPERTY: every generated token is a valid vocab id."""
+    dc = DataConfig(vocab_size=257, seq_len=48, batch_size=2, seed=seed,
+                    zipf_a=zipf)
+    batch = next(SyntheticLM(dc).batches())
+    for k in ("tokens", "labels"):
+        assert batch[k].min() >= 0
+        assert batch[k].max() < 257
