@@ -1,49 +1,52 @@
 """Cold-start reproduction (paper §5): Junction instance init 3.4 ms vs
-containerd container start; plus junctiond scale-up paths (uProc spawn vs
-isolated sibling instance)."""
+containerd container start, measured under a concurrent deploy storm
+(FaaSNet's bursty provisioning regime) by the ``cold-start-storm``
+scenario; plus junctiond scale-up paths (uProc spawn vs isolated sibling
+instance), which stay a direct manager measurement."""
 from __future__ import annotations
 
-from repro.core import FaasdRuntime, FunctionSpec, Simulator
+from repro.core import FaasdRuntime, Simulator
+from repro.experiments import ExperimentRunner, get_scenario
 
 
-def _deploy_time(backend, **kw) -> float:
+def _scale_up_ms(isolate: bool) -> float:
     sim = Simulator()
-    rt = FaasdRuntime(sim, backend=backend)
+    rt = FaasdRuntime(sim, backend="junctiond")
     t0 = sim.now
-    rt.deploy_blocking(FunctionSpec(name="f", **kw))
+    p = sim.process(rt.manager.deploy("f4", scale=4,
+                                      isolate_replicas=isolate))
+    p.completion.callbacks.append(lambda _v: sim.stop())
+    sim.run()
     return (sim.now - t0) * 1e3
 
 
 def run(verbose=True):
-    j = _deploy_time("junctiond")
-    c = _deploy_time("containerd")
-    # scale 4 replicas inside ONE instance (uProcs) vs 4 isolated instances
-    sim = Simulator()
-    rt = FaasdRuntime(sim, backend="junctiond")
-    t0 = sim.now
-    p = sim.process(rt.manager.deploy("f4", scale=4, isolate_replicas=False))
-    p.completion.callbacks.append(lambda _v: sim.stop())
-    sim.run()
-    shared = (sim.now - t0) * 1e3
-    sim2 = Simulator()
-    rt2 = FaasdRuntime(sim2, backend="junctiond")
-    t0 = sim2.now
-    p = sim2.process(rt2.manager.deploy("f4i", scale=4, isolate_replicas=True))
-    p.completion.callbacks.append(lambda _v: sim2.stop())
-    sim2.run()
-    isolated = (sim2.now - t0) * 1e3
+    doc = ExperimentRunner().run_suite([get_scenario("cold-start-storm")],
+                                       suite="coldstart")
+    if doc["failures"]:
+        raise RuntimeError(doc["failures"][0]["error"])
+    entry = doc["scenarios"][0]
+    claims = entry["claims"]
+    j = claims["junction_init_ms"]["measured"]
+    c = claims["containerd_coldstart_ms"]["measured"]
+    shared = _scale_up_ms(isolate=False)
+    isolated = _scale_up_ms(isolate=True)
     if verbose:
+        storm_j = entry["backends"]["junctiond"]
         print("# cold start")
         print(f"  junction instance init : {j:8.2f} ms  (paper: 3.4 ms)")
         print(f"  containerd cold start  : {c:8.2f} ms")
+        print(f"  storm ({storm_j['functions']} concurrent deploy+invoke): "
+              f"junctiond median {storm_j['median_ms']:.2f} ms, "
+              f"{claims['storm_speedup']['measured']:.0f}x faster than "
+              "containerd")
         print(f"  junctiond scale=4 uProcs (shared instance)  : {shared:8.2f} ms")
         print(f"  junctiond scale=4 isolated instances        : {isolated:8.2f} ms")
-    rows = [("coldstart_junction_init", j * 1e3, "us (paper 3.4ms)"),
-            ("coldstart_containerd", c * 1e3, "us"),
-            ("coldstart_ratio", c / j, "x containerd/junction"),
-            ("scaleup_shared_uprocs_4", shared * 1e3, "us"),
-            ("scaleup_isolated_4", isolated * 1e3, "us")]
-    return rows, {"junction_ms": j, "containerd_ms": c}
+    rows = [(m["name"], m["value"], m["derived"]) for m in doc["metrics"]
+            if m["name"].startswith("coldstart_")]
+    rows += [("scaleup_shared_uprocs_4", shared * 1e3, "us"),
+             ("scaleup_isolated_4", isolated * 1e3, "us")]
+    return rows, {"junction_ms": j, "containerd_ms": c, "claims": claims}
 
 
 if __name__ == "__main__":

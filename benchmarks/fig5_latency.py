@@ -3,56 +3,45 @@ invocations, containerd vs junctiond, observed from the gateway.
 
 Paper claims: median -37.33%, P99 -63.42% end-to-end; function execution
 median -35.3%, P99 -81%.
+
+Thin adapter over the ``paper-fig5`` scenario in
+:mod:`repro.experiments.suites`; the measurement itself lives in the
+experiment runner.
 """
 from __future__ import annotations
 
-import numpy as np
+import dataclasses
 
-from repro.core import (FaasdRuntime, FunctionSpec, LatencySummary,
-                        Simulator, run_sequential)
+from repro.experiments import ExperimentRunner, get_scenario
 
 PAPER = {"e2e_median": 37.33, "e2e_p99": 63.42, "exec_median": 35.3,
          "exec_p99": 81.0}
 
 
 def run(seeds=range(8), n=100, verbose=True):
-    res = {}
-    for backend in ("containerd", "junctiond"):
-        e2e, exe = [], []
-        for seed in seeds:
-            sim = Simulator(seed=seed)
-            rt = FaasdRuntime(sim, backend=backend)
-            rt.deploy_blocking(FunctionSpec(name="aes"))
-            e2e.append(run_sequential(rt, "aes", n=n))
-            exe.append(LatencySummary.of(rt.exec_latencies_ms()))
-        res[backend] = {
-            "median_ms": float(np.mean([s.median_ms for s in e2e])),
-            "p99_ms": float(np.mean([s.p99_ms for s in e2e])),
-            "exec_median_ms": float(np.mean([s.median_ms for s in exe])),
-            "exec_p99_ms": float(np.mean([s.p99_ms for s in exe])),
-        }
-    c, j = res["containerd"], res["junctiond"]
-    out = {
-        "e2e_median": 100 * (1 - j["median_ms"] / c["median_ms"]),
-        "e2e_p99": 100 * (1 - j["p99_ms"] / c["p99_ms"]),
-        "exec_median": 100 * (1 - j["exec_median_ms"] / c["exec_median_ms"]),
-        "exec_p99": 100 * (1 - j["exec_p99_ms"] / c["exec_p99_ms"]),
-    }
+    sc = dataclasses.replace(get_scenario("paper-fig5"),
+                             seeds=tuple(seeds), n_requests=n)
+    doc = ExperimentRunner().run_suite([sc], suite="fig5")
+    if doc["failures"]:
+        raise RuntimeError(doc["failures"][0]["error"])
+    entry = doc["scenarios"][0]
+    c = entry["backends"]["containerd"]
+    j = entry["backends"]["junctiond"]
+    claims = entry["claims"]
     if verbose:
-        print("# fig5: 100 sequential AES(600B) invocations (8 seeds)")
+        print(f"# fig5: {n} sequential AES(600B) invocations "
+              f"({len(sc.seeds)} seeds)")
         print(f"  containerd: median={c['median_ms']:.3f}ms p99={c['p99_ms']:.3f}ms "
               f"exec median={c['exec_median_ms']:.3f} p99={c['exec_p99_ms']:.3f}")
         print(f"  junctiond : median={j['median_ms']:.3f}ms p99={j['p99_ms']:.3f}ms "
               f"exec median={j['exec_median_ms']:.3f} p99={j['exec_p99_ms']:.3f}")
-        for k, v in out.items():
-            print(f"  reduction {k:12s}: {v:6.2f}%   (paper: {PAPER[k]}%)")
-    rows = [("fig5_containerd_median", c["median_ms"] * 1e3, "us e2e"),
-            ("fig5_junctiond_median", j["median_ms"] * 1e3, "us e2e"),
-            ("fig5_median_reduction", out["e2e_median"], f"% vs paper {PAPER['e2e_median']}%"),
-            ("fig5_p99_reduction", out["e2e_p99"], f"% vs paper {PAPER['e2e_p99']}%"),
-            ("fig5_exec_median_reduction", out["exec_median"], f"% vs paper {PAPER['exec_median']}%"),
-            ("fig5_exec_p99_reduction", out["exec_p99"], f"% vs paper {PAPER['exec_p99']}%")]
-    return rows, {"measured": res, "reductions": out, "paper": PAPER}
+        for k, cl in claims.items():
+            print(f"  reduction {k:28s}: {cl['measured']:6.2f}%   "
+                  f"(paper: {cl['paper']}%)")
+    rows = [(m["name"], m["value"], m["derived"]) for m in doc["metrics"]
+            if m["name"].startswith("fig5_")]
+    return rows, {"measured": {"containerd": c, "junctiond": j},
+                  "claims": claims, "paper": PAPER}
 
 
 if __name__ == "__main__":

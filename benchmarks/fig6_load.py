@@ -3,66 +3,53 @@ Poisson), containerd vs junctiond.
 
 Paper claims: junctiond sustains ~10x more throughput while lowering
 median latency ~2x and the tail ~3.5x.
+
+Thin adapter over the ``paper-fig6`` scenario; sweep execution, knee/SLO
+detection, and claim deltas live in :mod:`repro.experiments.runner`.
 """
 from __future__ import annotations
 
-from repro.core import FaasdRuntime, FunctionSpec, Simulator, run_open_loop
+from repro.experiments import ExperimentRunner, get_scenario
 
-RATES_BASE = [500, 1000, 1250, 1500, 1750]
-RATES_JUNC = [2000, 5000, 9000, 12000, 13000, 14000]
-SLO_P99_MS = 10.0
+DEFAULT_DURATION_S = 1.5
 
 
-def _sweep(backend, rates, duration_s=1.5, seed=3):
-    curve = []
-    for rate in rates:
-        sim = Simulator(seed=seed)
-        rt = FaasdRuntime(sim, backend=backend)
-        rt.deploy_blocking(FunctionSpec(name="aes", max_cores=8))
-        res = run_open_loop(rt, "aes", rate_rps=rate, duration_s=duration_s)
-        curve.append(res)
-    return curve
-
-
-def _knee(curve):
-    best = 0.0
-    for r in curve:
-        if (r["p99_ms"] <= SLO_P99_MS and r["rejected"] == 0
-                and r["achieved_rps"] >= 0.85 * r["offered_rps"]):
-            best = max(best, r["offered_rps"])
-    return best
-
-
-def run(verbose=True, duration_s=1.5):
-    c_curve = _sweep("containerd", RATES_BASE, duration_s)
-    j_curve = _sweep("junctiond", RATES_JUNC, duration_s)
-    c_knee, j_knee = _knee(c_curve), _knee(j_curve)
-    ratio = j_knee / max(1.0, c_knee)
-    # latency comparison at the baseline's knee load
-    c_at = next(r for r in c_curve if r["offered_rps"] == c_knee)
-    j_at = min(j_curve, key=lambda r: abs(r["offered_rps"] - c_knee * 1.3))
-    med_x = c_at["median_ms"] / j_at["median_ms"]
-    p99_x = c_at["p99_ms"] / j_at["p99_ms"]
+def run(verbose=True, duration_s=DEFAULT_DURATION_S):
+    sc = get_scenario("paper-fig6")
+    doc = ExperimentRunner(
+        duration_scale=duration_s / sc.duration_s).run_suite([sc],
+                                                             suite="fig6")
+    if doc["failures"]:
+        raise RuntimeError(doc["failures"][0]["error"])
+    entry = doc["scenarios"][0]
+    claims = entry["claims"]
     if verbose:
-        print("# fig6: open-loop load sweep (p99 SLO %.0fms)" % SLO_P99_MS)
-        for name, curve in (("containerd", c_curve), ("junctiond", j_curve)):
+        print("# fig6: open-loop load sweep (p99 SLO %.0fms)" % sc.slo_p99_ms)
+        for name in ("containerd", "junctiond"):
+            res = entry["backends"][name]
             print(f"  {name}:")
-            for r in curve:
-                print(f"    rate={r['offered_rps']:6.0f} achieved={r['achieved_rps']:8.0f} "
+            for r in res["curve"]:
+                print(f"    rate={r['nominal_rps']:6.0f} "
+                      f"achieved={r['achieved_rps']:8.0f} "
                       f"median={r['median_ms']:8.2f}ms p99={r['p99_ms']:9.2f}ms")
-        print(f"  sustainable: containerd={c_knee:.0f} rps, junctiond={j_knee:.0f} rps "
-              f"-> {ratio:.1f}x (paper: ~10x)")
-        print(f"  at-load latency: median {med_x:.2f}x lower (paper ~2x), "
-              f"p99 {p99_x:.2f}x lower (paper ~3.5x)")
-    rows = [
-        ("fig6_containerd_sustainable_rps", c_knee, "rps at p99<=10ms"),
-        ("fig6_junctiond_sustainable_rps", j_knee, "rps at p99<=10ms"),
-        ("fig6_throughput_ratio", ratio, "x (paper ~10x)"),
-        ("fig6_median_speedup_at_load", med_x, "x (paper ~2x)"),
-        ("fig6_p99_speedup_at_load", p99_x, "x (paper ~3.5x)"),
-    ]
-    return rows, {"containerd": c_curve, "junctiond": j_curve,
-                  "knees": {"containerd": c_knee, "junctiond": j_knee}}
+        c_knee = claims["containerd_knee_rps"]["measured"]
+        j_knee = claims["junctiond_knee_rps"]["measured"]
+        print(f"  sustainable: containerd={c_knee:.0f} rps, "
+              f"junctiond={j_knee:.0f} rps "
+              f"-> {claims['throughput_ratio']['measured']:.1f}x (paper: ~10x)")
+        if "median_speedup" in claims:
+            print(f"  at-load latency: median "
+                  f"{claims['median_speedup']['measured']:.2f}x lower "
+                  f"(paper ~2x), p99 "
+                  f"{claims['p99_speedup']['measured']:.2f}x lower "
+                  f"(paper ~3.5x)")
+    rows = [(m["name"], m["value"], m["derived"]) for m in doc["metrics"]
+            if m["name"].startswith("fig6_")]
+    knees = {b: entry["backends"][b]["knee_rps"]
+             for b in ("containerd", "junctiond")}
+    return rows, {"containerd": entry["backends"]["containerd"]["curve"],
+                  "junctiond": entry["backends"]["junctiond"]["curve"],
+                  "knees": knees, "claims": claims}
 
 
 if __name__ == "__main__":

@@ -1,18 +1,38 @@
-"""Benchmark harness: one module per paper table/figure (+ beyond-paper).
+"""Benchmark harness.
 
-Prints ``name,us_per_call,derived`` CSV at the end, as well as each
-bench's human-readable report.
+Two families of suites:
+
+* scenario suites (``--suite scenarios|smoke|paper``) — declarative
+  Scenario specs executed by :class:`repro.experiments.ExperimentRunner`
+  across the containerd/junctiond matrix, emitting a machine-readable
+  ``BENCH_<suite>.json`` artifact (``--json``) with per-scenario latency
+  histograms, knee/SLO metrics, and paper-claim deltas.
+* ``--suite legacy`` (default) — the original one-module-per-figure
+  benches, printing ``name,value,derived`` CSV.
+
+Exit status is nonzero when any bench or scenario cell fails.
+
+Examples::
+
+    python -m benchmarks.run --suite smoke --json BENCH_ci.json
+    python -m benchmarks.run --suite scenarios --json BENCH_scenarios.json \
+        --workers 4
+    python -m benchmarks.run --suite legacy
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 from benchmarks import (aes_function, coldstart, fig5_latency, fig6_load,
                         model_endpoints, multitenant, polling_efficiency,
                         roofline_table)
+from repro.experiments import (ExperimentRunner, SMOKE_DURATION_SCALE,
+                               SUITES, build_artifact, get_suite,
+                               metric_row, metrics_csv, write_artifact)
 
-BENCHES = [
+LEGACY_BENCHES = [
     ("fig5_latency", fig5_latency),
     ("fig6_load", fig6_load),
     ("coldstart", coldstart),
@@ -24,9 +44,9 @@ BENCHES = [
 ]
 
 
-def main() -> None:
-    all_rows = []
-    for name, mod in BENCHES:
+def run_legacy(args) -> int:
+    all_rows, failures = [], []
+    for name, mod in LEGACY_BENCHES:
         print(f"\n===== {name} =====")
         t0 = time.time()
         try:
@@ -35,11 +55,85 @@ def main() -> None:
         except Exception as e:
             print(f"  BENCH FAILED: {e!r}")
             all_rows.append((f"{name}_FAILED", float("nan"), repr(e)))
+            failures.append({"scenario": name, "backend": "-",
+                             "error": repr(e)})
         print(f"  [{time.time() - t0:.1f}s]")
-    print("\nname,us_per_call,derived")
-    for name, us, derived in all_rows:
-        print(f"{name},{us:.3f},{derived}")
+    print("\nname,value,derived")
+    for name, value, derived in all_rows:
+        v = float(value) if isinstance(value, (int, float)) else float("nan")
+        print(f"{name},{v:.3f},{derived}")
+    if args.json:
+        metrics = [metric_row(n, v, d) for n, v, d in all_rows]
+        write_artifact(args.json, build_artifact("legacy", [], metrics,
+                                                 failures))
+        print(f"\nwrote {args.json}")
+    if failures:
+        print(f"\n{len(failures)} bench(es) FAILED", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def run_scenarios(args) -> int:
+    smoke = args.suite == "smoke"
+    scale = args.duration * (SMOKE_DURATION_SCALE if smoke else 1.0)
+    runner = ExperimentRunner(duration_scale=scale, smoke=smoke,
+                              workers=args.workers, verbose=True)
+    scenarios = get_suite(args.suite)
+    print(f"suite={args.suite}: {len(scenarios)} scenarios x "
+          f"{{containerd, junctiond}}, duration_scale={scale:.2f}, "
+          f"workers={args.workers}")
+    doc = runner.run_suite(scenarios, suite=args.suite)
+    for entry in doc["scenarios"]:
+        print(f"\n===== {entry['name']} ({entry['mode']}, "
+              f"{entry['arrival_kind']} arrivals) =====")
+        for backend, res in entry["backends"].items():
+            bits = [f"n={res.get('n', 0)}"]
+            if res.get("knee_rps") is not None and entry["mode"] == "open":
+                bits.append(f"knee={res['knee_rps']:.0f}rps")
+            if isinstance(res.get("median_ms"), float):
+                bits.append(f"median={res['median_ms']:.3f}ms")
+                bits.append(f"p99={res['p99_ms']:.3f}ms")
+            bits.append(f"[{res.get('elapsed_s', 0):.1f}s]")
+            print(f"  {backend:11s} " + " ".join(bits))
+        for key, cl in entry.get("claims", {}).items():
+            paper = f" (paper {cl['paper']})" if "paper" in cl else ""
+            print(f"    claim {key:28s} = {cl['measured']}{paper}")
+    print()
+    print(metrics_csv(doc))
+    if args.json:
+        write_artifact(args.json, doc)
+        print(f"\nwrote {args.json} "
+              f"({doc['meta']['wall_s']:.1f}s wall)")
+    if doc["failures"]:
+        for f in doc["failures"]:
+            print(f"\nFAILED {f['scenario']}/{f['backend']}:\n{f['error']}",
+                  file=sys.stderr)
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--suite", default="legacy",
+                    choices=["legacy"] + sorted(SUITES),
+                    help="which suite to run (default: legacy)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable bench artifact here")
+    ap.add_argument("--duration", type=float, default=1.0, metavar="SCALE",
+                    help="duration scale factor on top of the suite default "
+                         "(smoke already applies %.2fx)" % SMOKE_DURATION_SCALE)
+    ap.add_argument("--workers", type=int, default=0, metavar="N",
+                    help="parallel worker processes for scenario suites "
+                         "(0 = in-process, deterministic ordering)")
+    args = ap.parse_args(argv)
+    if args.suite == "legacy":
+        if args.duration != 1.0 or args.workers:
+            print("note: --duration/--workers only apply to scenario "
+                  "suites; the legacy suite ignores them", file=sys.stderr)
+        return run_legacy(args)
+    return run_scenarios(args)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -12,7 +12,11 @@ from repro.core.netstack import NetStack
 from repro.core.resources import CorePool
 from repro.core.scheduler import JunctionScheduler, PollingModel
 from repro.core.simulator import Event, Process, Queue, Simulator
-from repro.core.workload import (LatencySummary, run_open_loop,
+from repro.core.workload import (ArrivalProcess, BurstyArrivals,
+                                 DiurnalArrivals, LatencySummary,
+                                 PoissonArrivals, TraceReplay,
+                                 heavy_tailed_work, knee_of_curve,
+                                 run_mixed_open_loop, run_open_loop,
                                  run_sequential, sustainable_throughput)
 
 __all__ = [
@@ -22,4 +26,7 @@ __all__ = [
     "JunctionScheduler", "PollingModel", "Event", "Process", "Queue",
     "Simulator", "LatencySummary", "run_open_loop", "run_sequential",
     "sustainable_throughput",
+    "ArrivalProcess", "PoissonArrivals", "BurstyArrivals", "DiurnalArrivals",
+    "TraceReplay", "heavy_tailed_work", "knee_of_curve",
+    "run_mixed_open_loop",
 ]

@@ -1,8 +1,16 @@
-"""Workload generators + metric helpers for the evaluation (paper §5)."""
+"""Workload generators + metric helpers for the evaluation (paper §5).
+
+Beyond the paper's two methodologies (sequential closed loop, Poisson open
+loop) this module provides the arrival-process zoo the scenario suite
+drives: bursty MMPP traffic (FaaSNet's dominant provisioning regime),
+diurnal rate drift, trace replay, and heavy-tailed per-invocation work —
+all deterministic under a fixed RNG so every stream is reproducible.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import math
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -94,6 +102,234 @@ def run_open_loop(runtime: FaasdRuntime, fn_name: str, rate_rps: float,
         "n": summary.n,
         "rejected": runtime.rejected,
     }
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes.
+#
+# Each process turns an RNG into a sorted array of absolute arrival times in
+# [0, duration_s).  Times are materialised up front (not sampled inside sim
+# processes) so a stream is a pure function of (process params, rng state):
+# fixed seed -> identical stream, which the determinism tests pin down.
+
+
+class ArrivalProcess:
+    """Base: a recipe for an arrival-time stream."""
+
+    def times(self, rng: np.random.Generator, duration_s: float) -> np.ndarray:
+        raise NotImplementedError
+
+    def mean_rps(self) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals(ArrivalProcess):
+    """Memoryless open-loop arrivals (the paper's Fig 6 methodology)."""
+    rate_rps: float
+
+    def times(self, rng, duration_s):
+        if self.rate_rps <= 0 or duration_s <= 0:
+            return np.empty(0)
+        # draw in blocks: cheaper than a python loop at 10k+ rps
+        out: List[np.ndarray] = []
+        t, expect = 0.0, max(16, int(self.rate_rps * duration_s * 1.2))
+        while t < duration_s:
+            gaps = rng.exponential(1.0 / self.rate_rps, size=expect)
+            ts = t + np.cumsum(gaps)
+            out.append(ts)
+            t = float(ts[-1])
+        all_ts = np.concatenate(out)
+        return all_ts[all_ts < duration_s]
+
+    def mean_rps(self):
+        return self.rate_rps
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstyArrivals(ArrivalProcess):
+    """Two-state Markov-modulated Poisson process: quiet periods at
+    ``base_rps`` punctuated by bursts at ``burst_rps`` (FaaSNet-style
+    bursty multi-function provisioning traffic)."""
+    base_rps: float
+    burst_rps: float
+    mean_quiet_s: float = 0.20
+    mean_burst_s: float = 0.05
+    start_in_burst: bool = False
+
+    def times(self, rng, duration_s):
+        out: List[float] = []
+        t, burst = 0.0, self.start_in_burst
+        seg_end = float(rng.exponential(
+            self.mean_burst_s if burst else self.mean_quiet_s))
+        while t < duration_s:
+            rate = self.burst_rps if burst else self.base_rps
+            gap = float(rng.exponential(1.0 / rate)) if rate > 0 else math.inf
+            if t + gap < seg_end:
+                t += gap
+                if t < duration_s:
+                    out.append(t)
+            else:
+                # exponential dwell is memoryless: restarting the gap at the
+                # segment boundary keeps each segment piecewise-Poisson
+                t = seg_end
+                burst = not burst
+                seg_end = t + float(rng.exponential(
+                    self.mean_burst_s if burst else self.mean_quiet_s))
+        return np.asarray(out)
+
+    def mean_rps(self):
+        tot = self.mean_quiet_s + self.mean_burst_s
+        return (self.base_rps * self.mean_quiet_s
+                + self.burst_rps * self.mean_burst_s) / tot
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalArrivals(ArrivalProcess):
+    """Sinusoidally-modulated Poisson (diurnal load drift compressed to
+    sim time), sampled by Lewis-Shedler thinning against the peak rate."""
+    mean_rate_rps: float
+    amplitude: float = 0.8          # fraction of the mean, in [0, 1]
+    period_s: float = 1.0
+    phase: float = -math.pi / 2     # start at the trough
+
+    def rate_at(self, t: float) -> float:
+        return self.mean_rate_rps * (1.0 + self.amplitude
+                                     * math.sin(2 * math.pi * t / self.period_s
+                                                + self.phase))
+
+    def times(self, rng, duration_s):
+        peak = self.mean_rate_rps * (1.0 + self.amplitude)
+        if peak <= 0 or duration_s <= 0:
+            return np.empty(0)
+        out: List[float] = []
+        t = 0.0
+        while True:
+            t += float(rng.exponential(1.0 / peak))
+            if t >= duration_s:
+                break
+            if rng.random() * peak < self.rate_at(t):
+                out.append(t)
+        return np.asarray(out)
+
+    def mean_rps(self):
+        return self.mean_rate_rps   # the sinusoid integrates to zero
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceReplay(ArrivalProcess):
+    """Replays a recorded (or synthesised) timestamp trace, optionally
+    time-compressed; arrivals beyond duration_s are dropped."""
+    trace_s: Sequence[float]
+    time_scale: float = 1.0
+
+    def times(self, rng, duration_s):
+        ts = np.sort(np.asarray(self.trace_s, dtype=np.float64)) * self.time_scale
+        return ts[(ts >= 0) & (ts < duration_s)]
+
+    def mean_rps(self):
+        ts = np.asarray(self.trace_s, dtype=np.float64) * self.time_scale
+        span = float(ts.max() - ts.min()) if len(ts) > 1 else 1.0
+        return len(ts) / max(span, 1e-9)
+
+
+def heavy_tailed_work(rng: np.random.Generator, median_us: float,
+                      alpha: float = 1.6,
+                      cap_mult: float = 200.0) -> Callable[[], float]:
+    """Pareto per-invocation CPU work (heavy-tailed payload sizes): returns
+    a sampler usable as ``FunctionSpec.work_us``.  ``median_us`` pins the
+    distribution median; ``cap_mult`` truncates the tail so a single
+    invocation cannot exceed median*cap_mult."""
+    xm = median_us / (2.0 ** (1.0 / alpha))
+    cap = median_us * cap_mult
+
+    def sample() -> float:
+        u = 1.0 - rng.random()          # u in (0, 1]
+        return float(min(xm * u ** (-1.0 / alpha), cap))
+
+    return sample
+
+
+# ---------------------------------------------------------------------------
+# Generic open-loop driver: any arrival process over a multi-function mix.
+
+
+def run_mixed_open_loop(runtime: FaasdRuntime, fn_names: Sequence[str],
+                        weights: Sequence[float], arrivals: ArrivalProcess,
+                        duration_s: float, warmup_frac: float = 0.2,
+                        max_outstanding: int = 20000,
+                        drain_s: float = 2.0) -> Dict[str, object]:
+    """Open-loop run of ``arrivals`` over a weighted function mix.
+
+    Generalizes ``run_open_loop`` (single fn, Poisson) to arbitrary arrival
+    processes and multi-tenant mixes; returns overall + per-function stats.
+    """
+    sim = runtime.sim
+    w = np.asarray(weights, dtype=np.float64)
+    w = w / w.sum()
+    t0 = sim.now
+    rel_times = arrivals.times(sim.rng, duration_s)
+    picks = sim.rng.choice(len(fn_names), size=len(rel_times), p=w)
+    outstanding = [0]
+    rejected0 = runtime.rejected
+
+    def driver():
+        for rel_t, pick in zip(rel_times, picks):
+            yield sim.timeout(t0 + float(rel_t) - sim.now)
+            if outstanding[0] >= max_outstanding:
+                runtime.rejected += 1
+                continue
+            outstanding[0] += 1
+
+            def one(fn=fn_names[pick]):
+                yield from runtime.invoke(fn)
+                outstanding[0] -= 1
+
+            sim.process(one())
+
+    start_idx = len(runtime.records)
+    sim.process(driver())
+    sim.run(until=t0 + duration_s + drain_s)
+    warmup_s = warmup_frac * duration_s
+    recs = [r for r in runtime.records[start_idx:]
+            if r.t_arrival >= t0 + warmup_s]
+    done = [r for r in recs if r.t_done <= t0 + duration_s + drain_s]
+    summary = LatencySummary.of([r.e2e * 1e3 for r in recs])
+    per_fn: Dict[str, LatencySummary] = {}
+    for name in fn_names:
+        lat = [r.e2e * 1e3 for r in recs if r.fn == name]
+        if lat:
+            per_fn[name] = LatencySummary.of(lat)
+    return {
+        "offered_rps": len(rel_times) / max(duration_s, 1e-9),
+        "achieved_rps": len(done) / max(1e-9, duration_s - warmup_s),
+        "median_ms": summary.median_ms,
+        "p99_ms": summary.p99_ms,
+        "mean_ms": summary.mean_ms,
+        "p999_ms": summary.p999_ms,
+        "n": summary.n,
+        "rejected": runtime.rejected - rejected0,
+        "per_fn": per_fn,
+        "latencies_ms": [r.e2e * 1e3 for r in recs],
+    }
+
+
+def knee_of_curve(curve: List[Dict[str, float]], slo_p99_ms: float,
+                  min_achieved_frac: float = 0.85,
+                  rate_key: str = "nominal_rps") -> float:
+    """Max offered rate whose P99 meets the SLO with no rejects and
+    achieved throughput within ``min_achieved_frac`` of offered.
+
+    Rows without a positive nominal rate (e.g. trace replay, where the
+    trace fixes the rate) fall back to the measured offered rate so the
+    achieved-fraction check still binds."""
+    best = 0.0
+    for r in curve:
+        rate = float(r.get(rate_key) or r["offered_rps"])
+        if (r["p99_ms"] <= slo_p99_ms and r.get("rejected", 0) == 0
+                and r["achieved_rps"] >= min_achieved_frac * rate):
+            best = max(best, rate)
+    return best
 
 
 def sustainable_throughput(backend: str, fn: Optional[FunctionSpec] = None,

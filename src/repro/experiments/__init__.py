@@ -1,0 +1,22 @@
+# Declarative scenario/experiment subsystem: Scenario specs (function mix,
+# arrival process, duration, backend matrix) executed by ExperimentRunner
+# into machine-readable BENCH_<suite>.json artifacts with per-scenario
+# histograms, knee/SLO metrics, and paper-claim deltas.
+from repro.experiments.artifacts import (build_artifact, latency_histogram,
+                                         metric_row, metrics_csv,
+                                         validate_artifact, write_artifact)
+from repro.experiments.runner import ExperimentRunner
+from repro.experiments.scenario import (ArrivalSpec, FunctionProfile,
+                                        Scenario, zipf_mix)
+from repro.experiments.suites import (SMOKE_DURATION_SCALE, SUITES,
+                                      build_scenarios, get_scenario,
+                                      get_suite)
+
+__all__ = [
+    "ArrivalSpec", "FunctionProfile", "Scenario", "zipf_mix",
+    "ExperimentRunner",
+    "build_artifact", "latency_histogram", "metric_row", "metrics_csv",
+    "validate_artifact", "write_artifact",
+    "SMOKE_DURATION_SCALE", "SUITES", "build_scenarios", "get_scenario",
+    "get_suite",
+]

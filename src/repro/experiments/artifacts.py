@@ -1,0 +1,119 @@
+"""Machine-readable bench artifacts (``BENCH_<suite>.json``).
+
+One artifact per suite run: every scenario's per-backend curves, latency
+histograms, knee/SLO metrics, and paper-claim deltas, plus a flat
+``metrics`` table (the old CSV rows) so regression tooling can diff runs
+without knowing scenario internals.  ``validate_artifact`` is the schema
+gate used both before writing and by the tests.
+"""
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+SCHEMA_VERSION = 1
+
+_REQUIRED_TOP = ("schema_version", "suite", "duration_scale", "scenarios",
+                 "metrics", "failures", "meta")
+_REQUIRED_SCENARIO = ("name", "mode", "description", "backends")
+_REQUIRED_METRIC = ("name", "value", "derived")
+
+
+def latency_histogram(lat_ms: Sequence[float], n_bins: int = 24) -> Dict[str, list]:
+    """Log-spaced latency histogram (µs-to-tail latencies span decades)."""
+    lat = np.asarray([l for l in lat_ms if l > 0 and math.isfinite(l)])
+    if len(lat) == 0:
+        return {"edges_ms": [], "counts": []}
+    lo, hi = float(lat.min()), float(lat.max())
+    if hi <= lo:
+        hi = lo * 1.001 + 1e-9
+    edges = np.logspace(np.log10(lo), np.log10(hi), n_bins + 1)
+    counts, _ = np.histogram(lat, bins=edges)
+    return {"edges_ms": [round(float(e), 6) for e in edges],
+            "counts": [int(c) for c in counts]}
+
+
+def metric_row(name: str, value: float, derived: str) -> Dict[str, object]:
+    v = float(value)
+    return {"name": name, "value": v if math.isfinite(v) else None,
+            "derived": derived}
+
+
+def build_artifact(suite: str, scenarios: List[Dict[str, object]],
+                   metrics: List[Dict[str, object]],
+                   failures: List[Dict[str, str]],
+                   duration_scale: float = 1.0,
+                   meta: Optional[Dict[str, object]] = None) -> Dict[str, object]:
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "suite": suite,
+        "duration_scale": duration_scale,
+        "scenarios": scenarios,
+        "metrics": metrics,
+        "failures": failures,
+        "meta": meta or {},
+    }
+
+
+def validate_artifact(doc: Dict[str, object]) -> None:
+    """Raise ValueError describing every schema violation found."""
+    problems: List[str] = []
+    if not isinstance(doc, dict):
+        raise ValueError("artifact must be a JSON object")
+    for key in _REQUIRED_TOP:
+        if key not in doc:
+            problems.append(f"missing top-level key {key!r}")
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        problems.append(f"schema_version must be {SCHEMA_VERSION}, "
+                        f"got {doc.get('schema_version')!r}")
+    if not isinstance(doc.get("scenarios"), list):
+        problems.append("scenarios must be a list")
+    else:
+        for i, sc in enumerate(doc["scenarios"]):
+            if not isinstance(sc, dict):
+                problems.append(f"scenarios[{i}] must be an object")
+                continue
+            for key in _REQUIRED_SCENARIO:
+                if key not in sc:
+                    problems.append(f"scenarios[{i}] ({sc.get('name', '?')}) "
+                                    f"missing {key!r}")
+            backends = sc.get("backends")
+            if isinstance(backends, dict):
+                for b, res in backends.items():
+                    if not isinstance(res, dict):
+                        problems.append(f"scenarios[{i}].backends[{b}] "
+                                        "must be an object")
+            else:
+                problems.append(f"scenarios[{i}].backends must be an object")
+    if not isinstance(doc.get("metrics"), list):
+        problems.append("metrics must be a list")
+    else:
+        for i, row in enumerate(doc["metrics"]):
+            if not isinstance(row, dict) or any(k not in row
+                                                for k in _REQUIRED_METRIC):
+                problems.append(f"metrics[{i}] must have keys "
+                                f"{_REQUIRED_METRIC}")
+    if not isinstance(doc.get("failures"), list):
+        problems.append("failures must be a list")
+    if problems:
+        raise ValueError("invalid bench artifact: " + "; ".join(problems))
+
+
+def write_artifact(path: str, doc: Dict[str, object]) -> None:
+    validate_artifact(doc)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=False)
+        f.write("\n")
+
+
+def metrics_csv(doc: Dict[str, object]) -> str:
+    """The legacy ``name,us_per_call,derived`` view of an artifact."""
+    lines = ["name,value,derived"]
+    for row in doc.get("metrics", []):
+        v = row["value"]
+        v_str = f"{v:.3f}" if isinstance(v, (int, float)) else "nan"
+        lines.append(f"{row['name']},{v_str},{row['derived']}")
+    return "\n".join(lines)

@@ -1,0 +1,127 @@
+"""Declarative scenario specs for the experiment runner.
+
+A :class:`Scenario` is plain data (picklable, JSON-serialisable) describing
+a workload: which functions are deployed (the mix), how requests arrive
+(the arrival process), for how long, and against which backends.  The
+:mod:`repro.experiments.runner` interprets the spec; nothing here touches
+the simulator, so scenario definitions stay cheap to build and ship to
+parallel worker processes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.latency import AES_600B_WORK_US
+from repro.core.workload import (ArrivalProcess, BurstyArrivals,
+                                 DiurnalArrivals, PoissonArrivals,
+                                 TraceReplay)
+
+BACKENDS = ("containerd", "junctiond")
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionProfile:
+    """One deployable function in a scenario's mix.
+
+    ``work_us`` is the median per-invocation CPU cost; when
+    ``heavy_tail_alpha`` is set the runner replaces the constant with a
+    Pareto sampler of that shape pinned to the same median.
+    """
+    name: str
+    work_us: float = AES_600B_WORK_US
+    payload_bytes: int = 600
+    response_bytes: int = 628
+    weight: float = 1.0
+    scale: int = 1
+    max_cores: int = 2
+    heavy_tail_alpha: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalSpec:
+    """Recipe for an arrival process, parameterised by the offered rate so
+    one spec serves every point of a load sweep.
+
+    kinds: ``poisson`` | ``bursty`` | ``diurnal`` | ``trace``.
+    """
+    kind: str = "poisson"
+    # bursty: fraction of the aggregate rate carried by the quiet state,
+    # and burst/quiet dwell times
+    quiet_frac: float = 0.25
+    mean_quiet_s: float = 0.20
+    mean_burst_s: float = 0.05
+    # diurnal
+    amplitude: float = 0.8
+    period_s: float = 1.0
+    # trace: absolute timestamps (rate argument ignored)
+    trace_s: Tuple[float, ...] = ()
+    time_scale: float = 1.0
+
+    def build(self, rate_rps: float) -> ArrivalProcess:
+        if self.kind == "poisson":
+            return PoissonArrivals(rate_rps)
+        if self.kind == "bursty":
+            # split the aggregate rate so the time-average equals rate_rps
+            tot = self.mean_quiet_s + self.mean_burst_s
+            quiet = rate_rps * self.quiet_frac
+            burst = (rate_rps * tot - quiet * self.mean_quiet_s) / self.mean_burst_s
+            return BurstyArrivals(quiet, burst, self.mean_quiet_s,
+                                  self.mean_burst_s)
+        if self.kind == "diurnal":
+            return DiurnalArrivals(rate_rps, self.amplitude, self.period_s)
+        if self.kind == "trace":
+            return TraceReplay(self.trace_s, self.time_scale)
+        raise ValueError(f"unknown arrival kind {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A complete experiment: mix + arrivals + duration + backend matrix.
+
+    modes:
+      * ``closed`` — n_requests sequential invocations per function
+        (paper Fig 5 methodology); ``rates`` unused.
+      * ``open``   — open-loop sweep over ``rates[backend]`` with knee/SLO
+        detection (paper Fig 6 methodology).
+      * ``storm``  — ``storm_functions`` concurrent deploy+first-invoke
+        (cold-start storm; FaaSNet's provisioning regime).
+    """
+    name: str
+    description: str
+    mode: str = "open"
+    functions: Tuple[FunctionProfile, ...] = (FunctionProfile("aes"),)
+    arrival: ArrivalSpec = ArrivalSpec("poisson")
+    rates: Optional[Dict[str, Tuple[float, ...]]] = None
+    smoke_rates: Optional[Dict[str, Tuple[float, ...]]] = None
+    duration_s: float = 1.0
+    warmup_frac: float = 0.2
+    n_requests: int = 100
+    seeds: Tuple[int, ...] = (0,)
+    n_cores: int = 10
+    slo_p99_ms: float = 10.0
+    storm_functions: int = 16
+    backends: Tuple[str, ...] = BACKENDS
+    claims_kind: Optional[str] = None     # "fig5" | "fig6" | "coldstart"
+    tags: Tuple[str, ...] = ()
+
+    def weights(self) -> List[float]:
+        return [f.weight for f in self.functions]
+
+    def fn_names(self) -> List[str]:
+        return [f.name for f in self.functions]
+
+    def rates_for(self, backend: str, smoke: bool = False) -> Sequence[float]:
+        table = (self.smoke_rates if smoke and self.smoke_rates
+                 else self.rates) or {}
+        return table.get(backend, ())
+
+def zipf_mix(n_functions: int, zipf_a: float = 1.5,
+             work_us: float = AES_600B_WORK_US,
+             prefix: str = "f") -> Tuple[FunctionProfile, ...]:
+    """A multi-tenant mix with Zipf-distributed popularity (Shahrad et al.:
+    most functions are rarely invoked)."""
+    ranks = range(1, n_functions + 1)
+    return tuple(FunctionProfile(name=f"{prefix}{i}", work_us=work_us,
+                                 weight=float(r) ** (-zipf_a))
+                 for i, r in enumerate(ranks))

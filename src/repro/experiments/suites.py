@@ -1,0 +1,179 @@
+"""The scenario registry and named suites.
+
+Scenario backlog rationale: production FaaS platforms are defined by
+workload diversity — paper Fig 5/6 cover a single warm function, FaaSNet
+motivates bursty provisioning storms, Shahrad et al. motivate long-tail
+multi-tenancy, and model serving adds ms-scale service times where the
+runtime overhead question changes shape.  Every scenario here runs on both
+backends so each suite is a containerd-vs-junctiond matrix.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from repro.core.latency import AES_600B_WORK_US
+from repro.experiments.scenario import (ArrivalSpec, FunctionProfile,
+                                        Scenario, zipf_mix)
+
+_DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+# analytic decode-step service times (µs) used when no dry-run roofline
+# record exists; overridden by repro.launch.dryrun artifacts when present
+_ENDPOINT_FALLBACK_US = {"qwen3-1.7b": 450.0, "mixtral-8x7b": 1800.0}
+
+
+def _roofline_step_us(arch: str, shape: str = "decode_32k") -> float:
+    path = os.path.join(_DRYRUN_DIR, f"{arch}__{shape}__pod16x16.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        roof = rec.get("roofline")
+        if roof:
+            return float(roof["step_time_s"]) * 1e6
+    return _ENDPOINT_FALLBACK_US[arch]
+
+
+def _trace_burst_train(n_bursts: int = 6, burst_n: int = 120,
+                       spacing_s: float = 0.18,
+                       intra_gap_s: float = 0.0004) -> tuple:
+    """Synthetic provisioning-trace: tight request trains every spacing_s
+    (deterministic stand-in for a recorded Azure/FaaSNet trace slice)."""
+    out: List[float] = []
+    for b in range(n_bursts):
+        t0 = 0.05 + b * spacing_s
+        out.extend(t0 + i * intra_gap_s for i in range(burst_n))
+    return tuple(round(t, 6) for t in out)
+
+
+def build_scenarios() -> Dict[str, Scenario]:
+    aes = FunctionProfile("aes")
+    scenarios = [
+        Scenario(
+            name="paper-fig5",
+            description="100 sequential AES(600B) invocations per seed; "
+                        "paper Fig 5 latency-distribution claims",
+            mode="closed", functions=(aes,), n_requests=100,
+            seeds=tuple(range(8)), claims_kind="fig5",
+            tags=("paper", "latency")),
+        Scenario(
+            name="paper-fig6",
+            description="Open-loop Poisson load sweep to the SLO knee; "
+                        "paper Fig 6 throughput/latency claims",
+            mode="open", functions=(FunctionProfile("aes", max_cores=8),),
+            arrival=ArrivalSpec("poisson"),
+            rates={"containerd": (500.0, 1000.0, 1250.0, 1500.0, 1750.0),
+                   "junctiond": (2000.0, 5000.0, 9000.0, 12000.0, 13000.0,
+                                 14000.0)},
+            smoke_rates={"containerd": (1000.0, 1500.0, 1750.0),
+                         "junctiond": (2000.0, 9000.0, 12000.0)},
+            duration_s=1.5, seeds=(3,), slo_p99_ms=10.0, claims_kind="fig6",
+            tags=("paper", "throughput")),
+        Scenario(
+            name="cold-start-storm",
+            description="Concurrent deploy+first-invoke storm (FaaSNet's "
+                        "bursty provisioning regime) + paper instance-init",
+            mode="storm", functions=(aes,), storm_functions=16,
+            seeds=(0, 1, 2), claims_kind="coldstart",
+            tags=("coldstart", "provisioning")),
+        Scenario(
+            name="multi-tenant-mix",
+            description="32 functions, Zipf(1.5) popularity, one open-loop "
+                        "stream on a 36-core worker (Shahrad long-tail mix)",
+            mode="open", functions=zipf_mix(32),
+            arrival=ArrivalSpec("poisson"),
+            rates={"containerd": (600.0, 1000.0, 1400.0),
+                   "junctiond": (1500.0, 4000.0, 8000.0)},
+            smoke_rates={"containerd": (1000.0,), "junctiond": (4000.0,)},
+            duration_s=1.0, n_cores=36, seeds=(0,), slo_p99_ms=10.0,
+            tags=("multitenant",)),
+        Scenario(
+            name="bursty-burst",
+            description="MMPP-2 bursty arrivals: quiet floor with 20x "
+                        "bursts; tests knee robustness to burstiness",
+            mode="open", functions=(FunctionProfile("aes", max_cores=8),),
+            arrival=ArrivalSpec("bursty", quiet_frac=0.25,
+                                mean_quiet_s=0.20, mean_burst_s=0.05),
+            rates={"containerd": (400.0, 800.0, 1200.0),
+                   "junctiond": (1500.0, 4000.0, 8000.0)},
+            smoke_rates={"containerd": (800.0,), "junctiond": (4000.0,)},
+            duration_s=1.2, seeds=(1,), slo_p99_ms=10.0,
+            tags=("bursty",)),
+        Scenario(
+            name="diurnal-drift",
+            description="Sinusoidal rate drift (diurnal pattern compressed "
+                        "to sim time): latency across the peak/trough",
+            mode="open", functions=(FunctionProfile("aes", max_cores=8),),
+            arrival=ArrivalSpec("diurnal", amplitude=0.8, period_s=0.5),
+            rates={"containerd": (600.0, 1000.0),
+                   "junctiond": (2000.0, 6000.0)},
+            smoke_rates={"containerd": (1000.0,), "junctiond": (6000.0,)},
+            duration_s=1.0, seeds=(2,), slo_p99_ms=10.0,
+            tags=("diurnal",)),
+        Scenario(
+            name="heavy-tail-mix",
+            description="Pareto(1.5) per-invocation work pinned to the AES "
+                        "median: heavy-tailed payloads vs the tail claims",
+            mode="open",
+            functions=(FunctionProfile("aes-ht", work_us=AES_600B_WORK_US,
+                                       max_cores=8, heavy_tail_alpha=1.5),),
+            arrival=ArrivalSpec("poisson"),
+            rates={"containerd": (400.0, 800.0, 1200.0),
+                   "junctiond": (1500.0, 4000.0, 8000.0)},
+            smoke_rates={"containerd": (800.0,), "junctiond": (4000.0,)},
+            duration_s=1.0, seeds=(4,), slo_p99_ms=25.0,
+            tags=("heavytail",)),
+        Scenario(
+            name="trace-replay",
+            description="Deterministic burst-train trace replay "
+                        "(provisioning-trace stand-in, ~640 rps mean)",
+            mode="open", functions=(FunctionProfile("aes", max_cores=8),),
+            arrival=ArrivalSpec("trace", trace_s=_trace_burst_train()),
+            rates={"containerd": (0.0,), "junctiond": (0.0,)},
+            duration_s=1.2, seeds=(0,), slo_p99_ms=25.0,
+            tags=("trace",)),
+        Scenario(
+            name="model-endpoint",
+            description="Model decode steps as junctiond functions: how "
+                        "much of an ms-scale endpoint budget the FaaS "
+                        "runtime costs (reuses serving/ dry-run rooflines)",
+            mode="closed",
+            functions=tuple(
+                FunctionProfile(arch, work_us=_roofline_step_us(arch),
+                                payload_bytes=2048, response_bytes=2048)
+                for arch in sorted(_ENDPOINT_FALLBACK_US)),
+            n_requests=50, seeds=(5, 6), tags=("serving", "endpoint")),
+    ]
+    return {sc.name: sc for sc in scenarios}
+
+
+SUITES: Dict[str, List[str]] = {
+    # full matrix at default durations — the acceptance gate
+    "scenarios": ["paper-fig5", "paper-fig6", "cold-start-storm",
+                  "multi-tenant-mix", "bursty-burst", "diurnal-drift",
+                  "heavy-tail-mix", "trace-replay", "model-endpoint"],
+    # short CI gate: same scenarios, smoke rates + scaled durations
+    "smoke": ["paper-fig5", "paper-fig6", "cold-start-storm",
+              "multi-tenant-mix", "bursty-burst", "diurnal-drift",
+              "heavy-tail-mix", "model-endpoint"],
+    # just the paper's headline figures
+    "paper": ["paper-fig5", "paper-fig6", "cold-start-storm"],
+}
+
+SMOKE_DURATION_SCALE = 0.33
+
+
+def get_scenario(name: str) -> Scenario:
+    reg = build_scenarios()
+    if name not in reg:
+        raise KeyError(f"unknown scenario {name!r}; have {sorted(reg)}")
+    return reg[name]
+
+
+def get_suite(name: str) -> List[Scenario]:
+    if name not in SUITES:
+        raise KeyError(f"unknown suite {name!r}; have {sorted(SUITES)}")
+    reg = build_scenarios()
+    return [reg[n] for n in SUITES[name]]

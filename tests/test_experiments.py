@@ -1,0 +1,208 @@
+"""Scenario/experiment subsystem tests: fixed-seed determinism of the
+arrival generators, artifact JSON schema, mode executors, and the paper's
+throughput-claim regression gate at smoke duration."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (BurstyArrivals, DiurnalArrivals, FaasdRuntime,
+                        FunctionSpec, PoissonArrivals, Simulator,
+                        TraceReplay, heavy_tailed_work, knee_of_curve,
+                        run_mixed_open_loop)
+from repro.experiments import (SMOKE_DURATION_SCALE, ExperimentRunner,
+                               build_artifact, build_scenarios,
+                               get_scenario, get_suite, latency_histogram,
+                               metric_row, validate_artifact,
+                               write_artifact)
+
+
+# ---------------------------------------------------------------------------
+# Arrival generators: fixed-seed determinism + shape of the stream.
+
+
+def test_poisson_arrivals_deterministic_and_rate_correct():
+    p = PoissonArrivals(2000.0)
+    a = p.times(np.random.default_rng(42), 2.0)
+    b = p.times(np.random.default_rng(42), 2.0)
+    np.testing.assert_array_equal(a, b)
+    c = p.times(np.random.default_rng(43), 2.0)
+    assert len(c) != len(a) or not np.array_equal(a, c)
+    assert 0.85 * 4000 <= len(a) <= 1.15 * 4000
+    assert np.all(np.diff(a) >= 0) and a[-1] < 2.0
+
+
+def test_bursty_arrivals_deterministic_and_burstier_than_poisson():
+    bp = BurstyArrivals(base_rps=200.0, burst_rps=8000.0)
+    a = bp.times(np.random.default_rng(7), 2.0)
+    b = bp.times(np.random.default_rng(7), 2.0)
+    np.testing.assert_array_equal(a, b)
+    # index of dispersion of interarrivals: MMPP >> Poisson (CV^2 = 1)
+    gaps = np.diff(a)
+    cv2_bursty = np.var(gaps) / np.mean(gaps) ** 2
+    pois = PoissonArrivals(bp.mean_rps()).times(np.random.default_rng(7), 2.0)
+    gaps_p = np.diff(pois)
+    cv2_pois = np.var(gaps_p) / np.mean(gaps_p) ** 2
+    assert cv2_bursty > 3.0 * cv2_pois
+
+
+def test_diurnal_arrivals_follow_the_sinusoid():
+    d = DiurnalArrivals(1000.0, amplitude=0.9, period_s=2.0)
+    ts = d.times(np.random.default_rng(0), 2.0)
+    # phase starts at the trough (t=0) and peaks mid-period (t=1): the
+    # middle half of the window must carry most of the arrivals
+    mid = int(np.sum((ts >= 0.5) & (ts < 1.5)))
+    outer = len(ts) - mid
+    assert mid > 2.0 * outer
+    assert 0.8 * 2000 <= len(ts) <= 1.2 * 2000
+
+
+def test_trace_replay_is_exact_and_clipped():
+    tr = TraceReplay((0.5, 0.1, 0.9, 1.4), time_scale=1.0)
+    np.testing.assert_allclose(tr.times(np.random.default_rng(0), 1.0),
+                               [0.1, 0.5, 0.9])
+    half = TraceReplay((0.5, 0.1, 0.9, 1.4), time_scale=0.5)
+    np.testing.assert_allclose(half.times(np.random.default_rng(0), 1.0),
+                               [0.05, 0.25, 0.45, 0.7])
+
+
+def test_heavy_tailed_work_median_and_determinism():
+    s1 = heavy_tailed_work(np.random.default_rng(3), 100.0, alpha=1.5)
+    xs = np.array([s1() for _ in range(4000)])
+    s2 = heavy_tailed_work(np.random.default_rng(3), 100.0, alpha=1.5)
+    ys = np.array([s2() for _ in range(4000)])
+    np.testing.assert_array_equal(xs, ys)
+    assert 90.0 <= np.median(xs) <= 110.0
+    assert xs.max() > 5 * np.median(xs)          # it is actually heavy-tailed
+    assert xs.max() <= 100.0 * 200.0             # cap holds
+
+
+# ---------------------------------------------------------------------------
+# Mixed open-loop driver.
+
+
+def test_run_mixed_open_loop_deterministic_and_per_fn():
+    def once():
+        sim = Simulator(seed=11)
+        rt = FaasdRuntime(sim, backend="junctiond")
+        rt.deploy_blocking(FunctionSpec(name="a"))
+        rt.deploy_blocking(FunctionSpec(name="b"))
+        return run_mixed_open_loop(rt, ["a", "b"], [0.8, 0.2],
+                                   PoissonArrivals(1200.0), duration_s=0.4)
+
+    r1, r2 = once(), once()
+    assert r1["median_ms"] == r2["median_ms"]
+    assert r1["n"] == r2["n"] > 100
+    assert set(r1["per_fn"]) == {"a", "b"}
+    assert r1["per_fn"]["a"].n > r1["per_fn"]["b"].n
+    assert r1["rejected"] == 0
+
+
+def test_knee_of_curve_respects_slo_and_achieved():
+    curve = [
+        {"nominal_rps": 100.0, "offered_rps": 100, "achieved_rps": 99,
+         "p99_ms": 2.0, "rejected": 0},
+        {"nominal_rps": 200.0, "offered_rps": 200, "achieved_rps": 198,
+         "p99_ms": 9.0, "rejected": 0},
+        {"nominal_rps": 400.0, "offered_rps": 400, "achieved_rps": 120,
+         "p99_ms": 5.0, "rejected": 0},        # fails achieved fraction
+        {"nominal_rps": 800.0, "offered_rps": 800, "achieved_rps": 799,
+         "p99_ms": 50.0, "rejected": 0},       # fails SLO
+    ]
+    assert knee_of_curve(curve, slo_p99_ms=10.0) == 200.0
+
+
+# ---------------------------------------------------------------------------
+# Artifact schema.
+
+
+def test_artifact_schema_roundtrip(tmp_path):
+    sc = dataclasses.replace(get_scenario("paper-fig5"), seeds=(0,),
+                             n_requests=30)
+    doc = ExperimentRunner(smoke=True).run_suite([sc], suite="unit")
+    validate_artifact(doc)
+    path = tmp_path / "BENCH_unit.json"
+    write_artifact(str(path), doc)
+    loaded = json.loads(path.read_text())
+    validate_artifact(loaded)
+    assert loaded["suite"] == "unit"
+    entry = loaded["scenarios"][0]
+    assert entry["name"] == "paper-fig5"
+    assert set(entry["backends"]) == {"containerd", "junctiond"}
+    for res in entry["backends"].values():
+        assert res["hist"]["counts"] and len(res["hist"]["edges_ms"]) == \
+            len(res["hist"]["counts"]) + 1
+    assert any(m["name"] == "fig5_median_reduction"
+               for m in loaded["metrics"])
+    assert loaded["failures"] == []
+
+
+def test_validate_artifact_rejects_malformed():
+    with pytest.raises(ValueError, match="missing top-level key"):
+        validate_artifact({"schema_version": 1})
+    doc = build_artifact("x", [{"name": "s"}], [metric_row("m", 1.0, "d")], [])
+    with pytest.raises(ValueError, match="missing 'mode'"):
+        validate_artifact(doc)
+    doc = build_artifact("x", [], [{"name": "m"}], [])
+    with pytest.raises(ValueError, match="metrics"):
+        validate_artifact(doc)
+
+
+def test_latency_histogram_handles_empty_and_counts():
+    assert latency_histogram([]) == {"edges_ms": [], "counts": []}
+    h = latency_histogram([0.1, 1.0, 10.0, 100.0], n_bins=8)
+    assert sum(h["counts"]) == 4
+
+
+# ---------------------------------------------------------------------------
+# Runner modes + failure isolation.
+
+
+def test_storm_mode_reports_deploy_and_invoke():
+    sc = dataclasses.replace(get_scenario("cold-start-storm"), seeds=(0,),
+                             storm_functions=4)
+    entry = ExperimentRunner().run_scenario(sc)
+    j = entry["backends"]["junctiond"]
+    c = entry["backends"]["containerd"]
+    assert j["n"] == c["n"] == 4
+    assert j["single_deploy_ms"] == pytest.approx(3.4, rel=0.01)
+    assert c["single_deploy_ms"] > 50 * j["single_deploy_ms"]
+    assert entry["claims"]["storm_speedup"]["measured"] > 10
+
+
+def test_runner_isolates_scenario_failures():
+    bad = dataclasses.replace(
+        get_scenario("paper-fig5"), name="bad",
+        mode="bogus", seeds=(0,))       # unknown mode -> executor raises
+    ok = dataclasses.replace(get_scenario("paper-fig5"), seeds=(0,),
+                             n_requests=20)
+    doc = ExperimentRunner(smoke=True).run_suite([bad, ok], suite="unit")
+    assert {f["scenario"] for f in doc["failures"]} == {"bad"}
+    assert doc["scenarios"][1]["backends"]      # the good one still ran
+    validate_artifact(doc)
+
+
+def test_suite_registry_covers_required_scenarios():
+    reg = build_scenarios()
+    names = {s.name for s in get_suite("scenarios")}
+    for required in ("paper-fig5", "paper-fig6", "cold-start-storm",
+                     "multi-tenant-mix", "bursty-burst", "model-endpoint"):
+        assert required in names and required in reg
+    assert len(names) >= 6
+    for sc in get_suite("smoke"):
+        assert set(sc.backends) == {"containerd", "junctiond"}
+
+
+# ---------------------------------------------------------------------------
+# Regression gate: the paper's headline throughput claim at smoke duration.
+
+
+def test_fig6_throughput_ratio_regression_smoke():
+    sc = get_scenario("paper-fig6")
+    doc = ExperimentRunner(duration_scale=SMOKE_DURATION_SCALE,
+                           smoke=True).run_suite([sc], suite="unit")
+    assert not doc["failures"], doc["failures"]
+    ratio = next(m["value"] for m in doc["metrics"]
+                 if m["name"] == "fig6_throughput_ratio")
+    assert ratio >= 5.0, f"fig6 throughput ratio regressed: {ratio}x < 5x"

@@ -4,8 +4,7 @@ import dataclasses
 
 import jax
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.config import get_arch, reduced
 from repro.serving import ContinuousBatcher, PagedKVManager, ServingEngine
