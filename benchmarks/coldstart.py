@@ -27,8 +27,8 @@ def run(verbose=True):
         raise RuntimeError(doc["failures"][0]["error"])
     entry = doc["scenarios"][0]
     claims = entry["claims"]
-    j = claims["junction_init_ms"]["measured"]
-    c = claims["containerd_coldstart_ms"]["measured"]
+    j = claims["treatment_init_ms"]["measured"]
+    c = claims["baseline_coldstart_ms"]["measured"]
     shared = _scale_up_ms(isolate=False)
     isolated = _scale_up_ms(isolate=True)
     if verbose:

@@ -1,0 +1,140 @@
+"""Diff two ``BENCH_<suite>.json`` artifacts and flag metric regressions.
+
+The flat ``metrics`` table is the stable cross-run surface (the runner
+keeps names pair-derived, so a containerd/junctiond run compares against
+any older artifact).  Each metric is classified by name into
+higher-is-better (ratios, speedups, reductions, sustainable rps) or
+lower-is-better (latencies), and a relative change beyond
+``--threshold`` in the bad direction is a regression.  Metrics present in
+the old artifact but missing from the new one are regressions too (a
+silently dropped gate is the failure mode this tool exists for).
+
+Exit status: 0 when clean, 1 when any regression was found — so CI can
+gate on ``python -m benchmarks.compare OLD.json NEW.json``.
+
+Examples::
+
+    python -m benchmarks.compare BENCH_main.json BENCH_ci.json
+    python -m benchmarks.compare old.json new.json --threshold 0.05 --all
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List, Tuple
+
+from repro.experiments import validate_artifact
+
+# name fragments marking metrics where larger values are better; anything
+# else (latency medians/p99s, init times) regresses when it grows
+_HIGHER_IS_BETTER = ("ratio", "speedup", "reduction", "sustainable",
+                     "knee", "throughput", "_rps")
+
+THRESHOLD_DEFAULT = 0.10
+
+
+def _direction(name: str) -> str:
+    lname = name.lower()
+    if any(tok in lname for tok in _HIGHER_IS_BETTER):
+        return "higher"
+    return "lower"
+
+
+def _load(path: str) -> Dict[str, object]:
+    with open(path) as f:
+        doc = json.load(f)
+    # v1 artifacts (older commits) validate too — the flat metrics table,
+    # the only surface this tool reads, has been stable since v1
+    validate_artifact(doc)
+    return doc
+
+
+def compare_metrics(old: Dict[str, object], new: Dict[str, object],
+                    threshold: float = THRESHOLD_DEFAULT,
+                    ) -> Tuple[List[dict], List[str]]:
+    """Row per old metric: name, old/new values, relative delta, status in
+    {ok, improved, regressed, missing, nan}; plus the list of new-only
+    metric names (informational)."""
+    old_m = {m["name"]: m["value"] for m in old["metrics"]}
+    new_m = {m["name"]: m["value"] for m in new["metrics"]}
+    rows: List[dict] = []
+    for name, ov in old_m.items():
+        direction = _direction(name)
+        row = {"name": name, "old": ov, "new": new_m.get(name),
+               "direction": direction, "rel_delta": None}
+        if name not in new_m:
+            row["status"] = "missing"
+        elif ov is None or new_m[name] is None:
+            # None encodes NaN in the artifact; losing a number is a
+            # regression, (re)gaining one is not
+            row["status"] = "nan" if new_m[name] is None and ov is not None \
+                else "ok"
+        else:
+            nv = new_m[name]
+            if ov == 0:
+                rel = 0.0 if nv == 0 else math.copysign(math.inf, nv)
+            else:
+                rel = (nv - ov) / abs(ov)
+            row["rel_delta"] = rel
+            worse = rel < -threshold if direction == "higher" \
+                else rel > threshold
+            better = rel > threshold if direction == "higher" \
+                else rel < -threshold
+            row["status"] = ("regressed" if worse
+                             else "improved" if better else "ok")
+        rows.append(row)
+    new_only = sorted(set(new_m) - set(old_m))
+    return rows, new_only
+
+
+def regressions(rows: List[dict]) -> List[dict]:
+    return [r for r in rows if r["status"] in ("regressed", "missing", "nan")]
+
+
+def _fmt(v) -> str:
+    return f"{v:.3f}" if isinstance(v, (int, float)) else "nan"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.compare", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("old", help="baseline BENCH_<suite>.json")
+    ap.add_argument("new", help="candidate BENCH_<suite>.json")
+    ap.add_argument("--threshold", type=float, default=THRESHOLD_DEFAULT,
+                    metavar="FRAC",
+                    help="relative noise threshold (default %(default)s)")
+    ap.add_argument("--all", action="store_true",
+                    help="print every metric, not just changes")
+    args = ap.parse_args(argv)
+
+    old, new = _load(args.old), _load(args.new)
+    rows, new_only = compare_metrics(old, new, threshold=args.threshold)
+
+    shown = rows if args.all else [r for r in rows if r["status"] != "ok"]
+    if shown:
+        print(f"{'status':10s} {'metric':40s} {'old':>12s} {'new':>12s} "
+              f"{'delta':>8s}")
+        for r in shown:
+            rel = r["rel_delta"]
+            delta = f"{rel:+.1%}" if isinstance(rel, float) \
+                and math.isfinite(rel) else "-"
+            print(f"{r['status']:10s} {r['name']:40s} "
+                  f"{_fmt(r['old']):>12s} {_fmt(r['new']):>12s} {delta:>8s}")
+    if new_only:
+        print(f"\n{len(new_only)} new metric(s) not in baseline: "
+              + ", ".join(new_only))
+
+    bad = regressions(rows)
+    n_improved = sum(1 for r in rows if r["status"] == "improved")
+    print(f"\n{len(rows)} metrics compared: {len(bad)} regressed, "
+          f"{n_improved} improved "
+          f"(threshold {args.threshold:.0%}, suites "
+          f"{old['suite']!r} -> {new['suite']!r})")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,8 +32,8 @@ def run(verbose=True, duration_s=DEFAULT_DURATION_S):
                 print(f"    rate={r['nominal_rps']:6.0f} "
                       f"achieved={r['achieved_rps']:8.0f} "
                       f"median={r['median_ms']:8.2f}ms p99={r['p99_ms']:9.2f}ms")
-        c_knee = claims["containerd_knee_rps"]["measured"]
-        j_knee = claims["junctiond_knee_rps"]["measured"]
+        c_knee = claims["baseline_knee_rps"]["measured"]
+        j_knee = claims["treatment_knee_rps"]["measured"]
         print(f"  sustainable: containerd={c_knee:.0f} rps, "
               f"junctiond={j_knee:.0f} rps "
               f"-> {claims['throughput_ratio']['measured']:.1f}x (paper: ~10x)")

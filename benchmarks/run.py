@@ -4,49 +4,61 @@ Two families of suites:
 
 * scenario suites (``--suite scenarios|smoke|paper``) — declarative
   Scenario specs executed by :class:`repro.experiments.ExperimentRunner`
-  across the containerd/junctiond matrix, emitting a machine-readable
-  ``BENCH_<suite>.json`` artifact (``--json``) with per-scenario latency
-  histograms, knee/SLO metrics, and paper-claim deltas.
+  across each scenario's backend matrix (default: the paper's
+  containerd/junctiond pair; ``--backends`` widens it to any registered
+  set), emitting a machine-readable ``BENCH_<suite>.json`` artifact
+  (``--json``) with per-scenario latency histograms, knee/SLO metrics,
+  and paper-claim deltas computed from the claims pair.
 * ``--suite legacy`` (default) — the original one-module-per-figure
   benches, printing ``name,value,derived`` CSV.
+* ``--list`` — enumerate registered backends and scenarios (names, modes,
+  rate grids) without running anything.
 
 Exit status is nonzero when any bench or scenario cell fails.
 
 Examples::
 
     python -m benchmarks.run --suite smoke --json BENCH_ci.json
+    python -m benchmarks.run --suite smoke \
+        --backends containerd,junctiond,quark,wasm --json BENCH_ci.json
     python -m benchmarks.run --suite scenarios --json BENCH_scenarios.json \
         --workers 4
-    python -m benchmarks.run --suite legacy
+    python -m benchmarks.run --list
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 
-from benchmarks import (aes_function, coldstart, fig5_latency, fig6_load,
-                        model_endpoints, multitenant, polling_efficiency,
-                        roofline_table)
+from repro.core.backends import available_backends, get_backend_class
 from repro.experiments import (ExperimentRunner, SMOKE_DURATION_SCALE,
-                               SUITES, build_artifact, get_suite,
-                               metric_row, metrics_csv, write_artifact)
+                               SUITES, build_artifact, build_scenarios,
+                               get_suite, metric_row, metrics_csv,
+                               write_artifact)
 
-LEGACY_BENCHES = [
-    ("fig5_latency", fig5_latency),
-    ("fig6_load", fig6_load),
-    ("coldstart", coldstart),
-    ("polling_efficiency", polling_efficiency),
-    ("multitenant", multitenant),
-    ("aes_function", aes_function),
-    ("model_endpoints", model_endpoints),
-    ("roofline_table", roofline_table),
-]
+def _legacy_benches():
+    # imported lazily: aes_function pulls in jax, which --list and the
+    # scenario suites never need
+    from benchmarks import (aes_function, coldstart, fig5_latency, fig6_load,
+                            model_endpoints, multitenant, polling_efficiency,
+                            roofline_table)
+    return [
+        ("fig5_latency", fig5_latency),
+        ("fig6_load", fig6_load),
+        ("coldstart", coldstart),
+        ("polling_efficiency", polling_efficiency),
+        ("multitenant", multitenant),
+        ("aes_function", aes_function),
+        ("model_endpoints", model_endpoints),
+        ("roofline_table", roofline_table),
+    ]
 
 
 def run_legacy(args) -> int:
     all_rows, failures = [], []
-    for name, mod in LEGACY_BENCHES:
+    for name, mod in _legacy_benches():
         print(f"\n===== {name} =====")
         t0 = time.time()
         try:
@@ -72,14 +84,53 @@ def run_legacy(args) -> int:
     return 1 if failures else 0
 
 
+def _parse_backends(spec: str):
+    names = list(dict.fromkeys(      # dedupe, keeping the given order
+        b.strip() for b in spec.split(",") if b.strip()))
+    registered = available_backends()
+    unknown = [b for b in names if b not in registered]
+    if unknown:
+        raise SystemExit(f"unknown backend(s) {', '.join(unknown)}; "
+                         f"registered: {', '.join(registered)}")
+    return tuple(names)
+
+
+def run_list(args) -> int:
+    """Enumerate registered backends and scenarios without running."""
+    print("registered backends:")
+    for name in available_backends():
+        cls = get_backend_class(name)
+        cs = cls.coldstart
+        print(f"  {name:11s} runtime={cls.runtime.name:8s} "
+              f"stack={cls.stack_costs.name:9s} "
+              f"coldstart={cs.deploy_ms:g}ms query={cs.query_ms:g}ms")
+    print("\nscenarios:")
+    for name, sc in sorted(build_scenarios().items()):
+        print(f"  {name:17s} mode={sc.mode:6s} arrival={sc.arrival.kind:8s} "
+              f"backends={','.join(sc.backends)} "
+              f"claims={sc.claims_kind or '-'}")
+        if sc.mode == "open" and sc.rates:
+            for b, grid in sorted(sc.rates.items()):
+                print(f"    rates[{b}] = {', '.join(f'{r:g}' for r in grid)}")
+    print("\nsuites:")
+    for suite, names in sorted(SUITES.items()):
+        print(f"  {suite:10s} = {', '.join(names)}")
+    return 0
+
+
 def run_scenarios(args) -> int:
     smoke = args.suite == "smoke"
     scale = args.duration * (SMOKE_DURATION_SCALE if smoke else 1.0)
     runner = ExperimentRunner(duration_scale=scale, smoke=smoke,
                               workers=args.workers, verbose=True)
     scenarios = get_suite(args.suite)
+    if args.backends:
+        matrix = _parse_backends(args.backends)
+        scenarios = [dataclasses.replace(sc, backends=matrix)
+                     for sc in scenarios]
+    backend_union = sorted({b for sc in scenarios for b in sc.backends})
     print(f"suite={args.suite}: {len(scenarios)} scenarios x "
-          f"{{containerd, junctiond}}, duration_scale={scale:.2f}, "
+          f"{{{', '.join(backend_union)}}}, duration_scale={scale:.2f}, "
           f"workers={args.workers}")
     doc = runner.run_suite(scenarios, suite=args.suite)
     for entry in doc["scenarios"]:
@@ -126,11 +177,21 @@ def main(argv=None) -> int:
     ap.add_argument("--workers", type=int, default=0, metavar="N",
                     help="parallel worker processes for scenario suites "
                          "(0 = in-process, deterministic ordering)")
+    ap.add_argument("--backends", metavar="A,B,...", default=None,
+                    help="comma-separated registered backend names to run "
+                         "every scenario against (default: each scenario's "
+                         "own matrix, normally containerd,junctiond)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered backends, scenarios and suites, "
+                         "then exit")
     args = ap.parse_args(argv)
+    if args.list:
+        return run_list(args)
     if args.suite == "legacy":
-        if args.duration != 1.0 or args.workers:
-            print("note: --duration/--workers only apply to scenario "
-                  "suites; the legacy suite ignores them", file=sys.stderr)
+        if args.duration != 1.0 or args.workers or args.backends:
+            print("note: --duration/--workers/--backends only apply to "
+                  "scenario suites; the legacy suite ignores them",
+                  file=sys.stderr)
         return run_legacy(args)
     return run_scenarios(args)
 

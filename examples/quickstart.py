@@ -1,12 +1,13 @@
-"""Quickstart: deploy the paper's AES(600 B) function on the junctiond
-FaaS runtime and invoke it 100 times — the Fig 5 experiment in ~20 lines.
+"""Quickstart: deploy the paper's AES(600 B) function on every registered
+execution backend and invoke it 100 times — the Fig 5 experiment, widened
+to the full backend matrix, in ~20 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 from repro.core import (FaasdRuntime, FunctionSpec, LatencySummary,
-                        Simulator, run_sequential)
+                        Simulator, available_backends, run_sequential)
 
-for backend in ("containerd", "junctiond"):
+for backend in available_backends():
     sim = Simulator(seed=0)
     runtime = FaasdRuntime(sim, backend=backend)
     runtime.deploy_blocking(FunctionSpec(name="aes"))     # vSwarm AES, 600 B

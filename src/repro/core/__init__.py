@@ -1,13 +1,20 @@
 # The paper's primary contribution: junctiond — kernel-bypass execution
 # backend for faasd — modelled as a composable system: a deterministic
 # discrete-event runtime hosting the faasd components (gateway, provider),
-# the two network datapaths (kernel vs Junction), the centralized polling
-# scheduler, and the junctiond/containerd managers.
+# a registry of pluggable execution backends (containerd, junctiond, and
+# the modeled quark/wasm backends from related work), the network
+# datapaths, and the centralized polling scheduler.
 from repro.core.autoscaler import Autoscaler, ScalePolicy
+from repro.core.backends import (ColdStartModel, ExecutionBackend,
+                                 UnknownFunctionError, available_backends,
+                                 get_backend_class, register_backend,
+                                 resolve_backend)
 from repro.core.containerd import Containerd
 from repro.core.faas import FaasdRuntime, FunctionSpec, InvocationRecord
 from repro.core.junction import JunctionInstance, UProc
 from repro.core.junctiond import Junctiond
+from repro.core.quark import Quark
+from repro.core.wasm import WasmSandbox
 from repro.core.netstack import NetStack
 from repro.core.resources import CorePool
 from repro.core.scheduler import JunctionScheduler, PollingModel
@@ -21,8 +28,12 @@ from repro.core.workload import (ArrivalProcess, BurstyArrivals,
 
 __all__ = [
     "Autoscaler", "ScalePolicy",
+    "ColdStartModel", "ExecutionBackend", "UnknownFunctionError",
+    "available_backends", "get_backend_class", "register_backend",
+    "resolve_backend",
     "Containerd", "FaasdRuntime", "FunctionSpec", "InvocationRecord",
-    "JunctionInstance", "UProc", "Junctiond", "NetStack", "CorePool",
+    "JunctionInstance", "UProc", "Junctiond", "Quark", "WasmSandbox",
+    "NetStack", "CorePool",
     "JunctionScheduler", "PollingModel", "Event", "Process", "Queue",
     "Simulator", "LatencySummary", "run_open_loop", "run_sequential",
     "sustainable_throughput",

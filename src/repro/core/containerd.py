@@ -3,10 +3,12 @@ function sandbox, kernel network stack, CFS scheduling."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Generator, Optional
+from typing import Generator, Optional
 
-from repro.core.latency import CONTAINERD_COLDSTART_MS, CONTAINERD_QUERY_MS
-from repro.core.simulator import Simulator
+from repro.core.backends import (ColdStartModel, ExecutionBackend,
+                                 register_backend)
+from repro.core.latency import (CONTAINERD_COLDSTART_MS, CONTAINERD_QUERY_MS,
+                                KERNEL_RUNTIME, KERNEL_STACK)
 
 
 @dataclasses.dataclass
@@ -18,37 +20,37 @@ class ContainerRecord:
     ready: bool = True
 
 
-class Containerd:
-    name = "containerd"
-    query_seconds = CONTAINERD_QUERY_MS * 1e-3
+@register_backend
+class Containerd(ExecutionBackend):
+    """Container-class lifecycle: ms-scale control plane, cold starts in
+    the hundreds of ms.  Also the base class for the other modeled
+    container-shaped backends (quark/wasm differ only in cost tables)."""
 
-    def __init__(self, sim: Simulator):
-        self.sim = sim
-        self.records: Dict[str, ContainerRecord] = {}
-        self.deploys = 0
+    name = "containerd"
+    runtime = KERNEL_RUNTIME
+    stack_costs = KERNEL_STACK
+    coldstart = ColdStartModel(deploy_ms=CONTAINERD_COLDSTART_MS,
+                               scale_factor=0.6,
+                               query_ms=CONTAINERD_QUERY_MS)
 
     def deploy(self, fn_name: str, *, scale: int = 1, max_cores: int = 2,
                isolate_replicas: bool = False) -> Generator:
-        """Container create + task start (warm image)."""
-        yield self.sim.timeout(CONTAINERD_COLDSTART_MS * 1e-3)
+        """Sandbox create + task start (warm image)."""
+        self.remove(fn_name)      # redeploy releases the old sandbox
+        yield self.sim.timeout(self.coldstart.deploy_seconds)
         self.records[fn_name] = ContainerRecord(
             name=fn_name, ip=f"10.62.0.{len(self.records) + 2}", port=8080,
             replicas=scale)
         self.deploys += 1
 
     def scale(self, fn_name: str, replicas: int) -> Generator:
-        # additional container tasks
-        yield self.sim.timeout(CONTAINERD_COLDSTART_MS * 1e-3 * 0.6)
-        self.records[fn_name].replicas = replicas
+        rec = self._require(fn_name)
+        # additional (or reaped) sandbox tasks
+        yield self.sim.timeout(self.coldstart.scale_seconds)
+        rec.replicas = replicas
 
-    def remove(self, fn_name: str) -> None:
-        self.records.pop(fn_name, None)
-
-    def query(self, fn_name: str) -> Generator:
-        """GetTask/Status RPC to containerd — ms-scale, can exceed the
-        function execution itself (paper §4)."""
-        yield self.sim.timeout(self.query_seconds)
-        return self.records.get(fn_name)
+    # query(): the inherited GetTask/Status RPC costs CONTAINERD_QUERY_MS —
+    # ms-scale, can exceed the function execution itself (paper §4).
 
     def lookup(self, fn_name: str) -> Optional[ContainerRecord]:
         return self.records.get(fn_name)

@@ -2,30 +2,27 @@
 
 Every invocation traverses the gateway and the provider before reaching
 the sandbox running the function (3 gRPC legs, responses flowing back the
-same path).  Both orchestration services run either as containers on the
-kernel stack (baseline) or inside Junction instances on the bypass stack
-(junctiond mode, paper §3 — "Junction instances host not only the function
-code but also the services in the FaaS runtime").
+same path).  Where the orchestration services run and which datapath a
+message rides is entirely the :class:`~repro.core.backends.ExecutionBackend`'s
+business: the runtime composes with whatever bundle the backend provides
+(cost tables, core pool, optional scheduler, netstack, lifecycle) and has
+no backend-specific branches.  Backends resolve by registry name or can
+be passed as ready instances.
 
 The provider optionally caches function metadata (replica count, IP,
-port), keeping containerd/junctiond off the warm critical path (paper §4;
-applied to BOTH backends for a fair comparison, as in the paper).
+port), keeping the backend's control plane off the warm critical path
+(paper §4; applied to EVERY backend for a fair comparison, as in the
+paper).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Dict, Generator, List, Optional, Union
 
-from repro.core.containerd import Containerd
-from repro.core.junction import JunctionInstance
-from repro.core.latency import (AES_600B_WORK_US, JUNCTION_RUNTIME,
-                                JUNCTION_STACK, KERNEL_RUNTIME, KERNEL_STACK,
-                                RuntimeCosts)
-from repro.core.netstack import NetStack
-from repro.core.resources import CorePool
-from repro.core.scheduler import JunctionScheduler, PollingModel
+from repro.core.backends import ExecutionBackend, resolve_backend
+from repro.core.latency import AES_600B_WORK_US, RuntimeCosts
+from repro.core.scheduler import PollingModel
 from repro.core.simulator import Simulator
-from repro.core.junctiond import Junctiond
 
 
 @dataclasses.dataclass
@@ -64,33 +61,20 @@ class InvocationRecord:
 class FaasdRuntime:
     """One worker node running the full faasd stack."""
 
-    def __init__(self, sim: Simulator, *, backend: str = "junctiond",
-                 n_cores: int = 10, provider_cache: bool = True,
-                 polling_model: PollingModel = PollingModel.CENTRALIZED):
+    def __init__(self, sim: Simulator, *,
+                 backend: Union[str, ExecutionBackend] = "junctiond",
+                 n_cores: Optional[int] = None, provider_cache: bool = True,
+                 polling_model: Optional[PollingModel] = None):
         self.sim = sim
-        self.backend_name = backend
         self.provider_cache = provider_cache
-        if backend == "junctiond":
-            self.runtime: RuntimeCosts = JUNCTION_RUNTIME
-            self.cores = CorePool(sim, n_cores, self.runtime)
-            self.scheduler = JunctionScheduler(sim, self.cores, polling_model)
-            self.scheduler.run()
-            self.stack = NetStack(sim, JUNCTION_STACK, self.cores)
-            self.manager = Junctiond(sim, self.scheduler)
-            # the runtime services themselves live in Junction instances
-            self._svc_gateway = JunctionInstance(sim, "svc/gateway", max_cores=4)
-            self._svc_provider = JunctionInstance(sim, "svc/provider", max_cores=4)
-            self._svc_gateway.ready = self._svc_provider.ready = True
-            self.scheduler.register(self._svc_gateway)
-            self.scheduler.register(self._svc_provider)
-        elif backend == "containerd":
-            self.runtime = KERNEL_RUNTIME
-            self.cores = CorePool(sim, n_cores, self.runtime)
-            self.scheduler = None
-            self.stack = NetStack(sim, KERNEL_STACK, self.cores)
-            self.manager = Containerd(sim)
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = resolve_backend(backend, sim, n_cores=n_cores,
+                                       polling_model=polling_model)
+        self.backend_name = self.backend.name
+        self.runtime: RuntimeCosts = self.backend.runtime
+        self.cores = self.backend.cores
+        self.scheduler = self.backend.scheduler
+        self.stack = self.backend.stack
+        self.manager = self.backend     # lifecycle ops go to the backend
         self.functions: Dict[str, FunctionSpec] = {}
         self._cache: Dict[str, object] = {}
         self.records: List[InvocationRecord] = []
@@ -127,7 +111,7 @@ class FaasdRuntime:
     def _exec_function(self, spec: FunctionSpec) -> Generator:
         """The function body: compute + OS interactions (+ tail hiccups)."""
         r = self.runtime
-        work = spec.work_seconds()
+        work = spec.work_seconds() * r.work_mult
         overhead = self.sim.lognormal_us(r.exec_syscall_overhead_us,
                                          r.app_jitter_sigma)
         hic = 0.0

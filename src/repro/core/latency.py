@@ -94,6 +94,10 @@ class RuntimeCosts:
     # runtime is lean (paper SS5: "compute optimizations ... reduction in
     # context switches").
     offpath_cpu_mult: float = 1.0
+    # multiplier on the function body's pure-compute time: 1.0 for native
+    # execution, >1 for sandboxes that recompile/interpret the workload
+    # (Wasm AOT/JIT) or add per-instruction virtualisation drag.
+    work_mult: float = 1.0
 
 
 KERNEL_RUNTIME = RuntimeCosts(
@@ -118,8 +122,57 @@ JUNCTION_RUNTIME = RuntimeCosts(
     offpath_cpu_mult=1.05,
 )
 
+# --- modeled backends from related work -----------------------------------
+#
+# Quark-style secure container runtime (arXiv:2309.12624): containers run
+# on a user-space guest kernel (QKernel) behind a hypervisor boundary
+# (QVisor).  Every syscall and every packet crosses the interception
+# layer, so the kernel datapath costs grow; cold start pays a guest-kernel
+# boot on top of the container create.
+
+QUARK_STACK = StackCosts(
+    name="quark",
+    send_lat_us=9.0,      # sendmsg forwarded through QVisor + host TCP tx
+    wire_us=1.0,
+    rx_lat_us=10.0,       # host rx + virtio-style delivery into the guest
+    wakeup_us=18.0,       # host interrupt + guest scheduler wakeup
+    tx_cpu_us=8.0, rx_cpu_us=9.0, wakeup_cpu_us=4.0,
+    per_kb_us=1.0,        # extra copy across the sandbox boundary
+    jitter_sigma=0.32,
+    hiccup_p=0.012, hiccup_lo_ms=0.7, hiccup_hi_ms=2.4,
+)
+
+QUARK_RUNTIME = RuntimeCosts(
+    name="quark",
+    gateway_us=172.0, provider_us=230.0, watchdog_us=115.0,
+    exec_syscall_overhead_us=140.0,   # per-syscall interception tax
+    exec_hiccup_p=0.028, exec_hiccup_lo_ms=0.8, exec_hiccup_hi_ms=3.0,
+    app_jitter_sigma=0.32,
+    thrash_coeff=0.95, thrash_cap=6.0,
+    offpath_cpu_mult=5.5,
+    work_mult=1.08,                   # guest-kernel virtualisation drag
+)
+
+# Wasm-style lightweight sandbox (arXiv:2010.07115, WasmEdge-class): the
+# function is a Wasm module instantiated in-process.  Kernel network stack
+# (no bypass), but instantiation is sub-ms and OS interactions go through
+# a thin WASI shim; the compute itself pays a moderate AOT/JIT overhead.
+
+WASM_RUNTIME = RuntimeCosts(
+    name="wasm",
+    gateway_us=150.0, provider_us=200.0, watchdog_us=70.0,
+    exec_syscall_overhead_us=24.0,    # WASI shim, far fewer OS round-trips
+    exec_hiccup_p=0.020, exec_hiccup_lo_ms=0.6, exec_hiccup_hi_ms=2.0,
+    app_jitter_sigma=0.28,
+    thrash_coeff=0.9, thrash_cap=6.0,
+    offpath_cpu_mult=4.2,
+    work_mult=1.35,                   # moderate compute overhead vs native
+)
+
 # Paper §5: measured Junction single-threaded instance init.
 JUNCTION_INSTANCE_INIT_MS = 3.4
+# Junctiond scale-up: one uProc spawn inside an already-running libOS.
+JUNCTION_UPROC_SPAWN_MS = 0.2
 # containerd cold start (container create + start, warm image) — literature
 # (firecracker/containerd studies report 300–700 ms for Linux containers).
 CONTAINERD_COLDSTART_MS = 450.0
@@ -128,6 +181,12 @@ CONTAINERD_COLDSTART_MS = 450.0
 # function execution time itself).
 CONTAINERD_QUERY_MS = 1.8
 JUNCTIOND_QUERY_MS = 0.15
+# Quark: container create + guest kernel (QKernel) boot behind QVisor.
+QUARK_COLDSTART_MS = 620.0
+QUARK_QUERY_MS = 2.1
+# Wasm: module instantiation from a compiled image — sub-ms.
+WASM_COLDSTART_MS = 0.6
+WASM_QUERY_MS = 0.4
 
 # The benchmark function: AES-128-CTR over a 600-byte input (vSwarm),
 # pure compute time on one 2.2 GHz Xeon core (~0.5 cycles/byte with AES-NI

@@ -37,15 +37,13 @@ def run_zipf_workload(backend: str, *, n_functions: int = 64,
                       polling: PollingModel = PollingModel.CENTRALIZED,
                       seed: int = 0) -> MultiTenantResult:
     sim = Simulator(seed=seed)
-    kw = {}
-    if backend == "junctiond":
-        kw["polling_model"] = polling
-    rt = FaasdRuntime(sim, backend=backend, n_cores=n_cores, **kw)
+    rt = FaasdRuntime(sim, backend=backend, n_cores=n_cores,
+                      polling_model=polling)
 
     # deploy until cores run out (per-instance polling caps this)
     hosted = 0
     for i in range(n_functions):
-        if backend == "junctiond" and rt.cores.n_cores <= 1:
+        if rt.scheduler is not None and rt.cores.n_cores <= 1:
             break
         rt.deploy_blocking(FunctionSpec(name=f"f{i}"))
         hosted += 1

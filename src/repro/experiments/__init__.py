@@ -6,14 +6,16 @@ from repro.experiments.artifacts import (build_artifact, latency_histogram,
                                          metric_row, metrics_csv,
                                          validate_artifact, write_artifact)
 from repro.experiments.runner import ExperimentRunner
-from repro.experiments.scenario import (ArrivalSpec, FunctionProfile,
-                                        Scenario, zipf_mix)
+from repro.experiments.scenario import (DEFAULT_BACKENDS,
+                                        DEFAULT_CLAIMS_PAIR, ArrivalSpec,
+                                        FunctionProfile, Scenario, zipf_mix)
 from repro.experiments.suites import (SMOKE_DURATION_SCALE, SUITES,
                                       build_scenarios, get_scenario,
                                       get_suite)
 
 __all__ = [
     "ArrivalSpec", "FunctionProfile", "Scenario", "zipf_mix",
+    "DEFAULT_BACKENDS", "DEFAULT_CLAIMS_PAIR",
     "ExperimentRunner",
     "build_artifact", "latency_histogram", "metric_row", "metrics_csv",
     "validate_artifact", "write_artifact",

@@ -14,11 +14,19 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-SCHEMA_VERSION = 1
+# v2: scenario entries record the configured backend matrix
+# (``backend_set``) and the (baseline, treatment) ``claims_pair`` next to
+# the per-backend results, so artifact consumers never have to assume the
+# containerd/junctiond pair.  v1 artifacts (written by older commits, the
+# trendline baseline case) still validate: the v2-only keys are required
+# only when the document says schema_version 2.
+SCHEMA_VERSION = 2
+_SUPPORTED_SCHEMA_VERSIONS = (1, 2)
 
 _REQUIRED_TOP = ("schema_version", "suite", "duration_scale", "scenarios",
                  "metrics", "failures", "meta")
-_REQUIRED_SCENARIO = ("name", "mode", "description", "backends")
+_REQUIRED_SCENARIO_V1 = ("name", "mode", "description", "backends")
+_REQUIRED_SCENARIO_V2 = _REQUIRED_SCENARIO_V1 + ("backend_set",)
 _REQUIRED_METRIC = ("name", "value", "derived")
 
 
@@ -66,9 +74,12 @@ def validate_artifact(doc: Dict[str, object]) -> None:
     for key in _REQUIRED_TOP:
         if key not in doc:
             problems.append(f"missing top-level key {key!r}")
-    if doc.get("schema_version") != SCHEMA_VERSION:
-        problems.append(f"schema_version must be {SCHEMA_VERSION}, "
-                        f"got {doc.get('schema_version')!r}")
+    version = doc.get("schema_version")
+    if version not in _SUPPORTED_SCHEMA_VERSIONS:
+        problems.append(f"schema_version must be one of "
+                        f"{_SUPPORTED_SCHEMA_VERSIONS}, got {version!r}")
+    required_scenario = (_REQUIRED_SCENARIO_V1 if version == 1
+                         else _REQUIRED_SCENARIO_V2)
     if not isinstance(doc.get("scenarios"), list):
         problems.append("scenarios must be a list")
     else:
@@ -76,7 +87,7 @@ def validate_artifact(doc: Dict[str, object]) -> None:
             if not isinstance(sc, dict):
                 problems.append(f"scenarios[{i}] must be an object")
                 continue
-            for key in _REQUIRED_SCENARIO:
+            for key in required_scenario:
                 if key not in sc:
                     problems.append(f"scenarios[{i}] ({sc.get('name', '?')}) "
                                     f"missing {key!r}")
@@ -88,6 +99,12 @@ def validate_artifact(doc: Dict[str, object]) -> None:
                                         "must be an object")
             else:
                 problems.append(f"scenarios[{i}].backends must be an object")
+            backend_set = sc.get("backend_set")
+            if backend_set is not None and not (
+                    isinstance(backend_set, list)
+                    and all(isinstance(b, str) for b in backend_set)):
+                problems.append(f"scenarios[{i}].backend_set must be a "
+                                "list of backend names")
     if not isinstance(doc.get("metrics"), list):
         problems.append("metrics must be a list")
     else:

@@ -97,6 +97,12 @@ def _exec_open(sc: Scenario, backend: str, duration_scale: float,
                smoke: bool) -> Dict[str, object]:
     duration = max(0.3, sc.duration_s * duration_scale)
     rates = sc.rates_for(backend, smoke=smoke)
+    if not rates:
+        # fail the cell loudly instead of emitting a zero-sample result
+        # whose NaN medians would poison the JSON artifact
+        raise ValueError(
+            f"scenario {sc.name!r} has no rate grid for backend "
+            f"{backend!r}; add rates[{backend!r}] or a '*' fallback")
     curve: List[Dict[str, object]] = []
     pooled_by_rate: Dict[float, List[float]] = {}
     for rate in rates:
@@ -209,20 +215,20 @@ def _run_backend(item: Tuple[Scenario, str, float, bool]):
 
 
 # ---------------------------------------------------------------------------
-# Paper-claim reductions.
+# Paper-claim reductions.  Every builder works on the scenario's
+# (baseline, treatment) pair — no backend names are hardcoded, so claims
+# survive arbitrary backend matrices as long as the pair is part of them.
 
 
-def _fig5_claims(backends: Dict[str, dict]) -> Dict[str, dict]:
-    c, j = backends["containerd"], backends["junctiond"]
-
-    def red(ck, jk):
-        return 100.0 * (1.0 - j[jk] / c[ck])
+def _fig5_claims(base: dict, treat: dict) -> Dict[str, dict]:
+    def red(key):
+        return 100.0 * (1.0 - treat[key] / base[key])
 
     measured = {
-        "e2e_median": red("median_ms", "median_ms"),
-        "e2e_p99": red("p99_ms", "p99_ms"),
-        "exec_median": red("exec_median_ms", "exec_median_ms"),
-        "exec_p99": red("exec_p99_ms", "exec_p99_ms"),
+        "e2e_median": red("median_ms"),
+        "e2e_p99": red("p99_ms"),
+        "exec_median": red("exec_median_ms"),
+        "exec_p99": red("exec_p99_ms"),
     }
     return {f"{k}_reduction_pct": {"measured": round(v, 2),
                                    "paper": PAPER_FIG5[k],
@@ -230,43 +236,41 @@ def _fig5_claims(backends: Dict[str, dict]) -> Dict[str, dict]:
             for k, v in measured.items()}
 
 
-def _fig6_claims(backends: Dict[str, dict]) -> Dict[str, dict]:
-    c, j = backends["containerd"], backends["junctiond"]
-    c_knee, j_knee = c["knee_rps"], j["knee_rps"]
-    ratio = j_knee / max(1.0, c_knee)
+def _fig6_claims(base: dict, treat: dict) -> Dict[str, dict]:
+    b_knee, t_knee = base["knee_rps"], treat["knee_rps"]
+    ratio = t_knee / max(1.0, b_knee)
     claims = {
-        "containerd_knee_rps": {"measured": c_knee},
-        "junctiond_knee_rps": {"measured": j_knee},
+        "baseline_knee_rps": {"measured": b_knee},
+        "treatment_knee_rps": {"measured": t_knee},
         "throughput_ratio": {
             "measured": round(ratio, 2), "paper": PAPER_FIG6["throughput_ratio"],
             "delta": round(ratio - PAPER_FIG6["throughput_ratio"], 2)},
     }
-    c_at = next((r for r in c["curve"] if r["nominal_rps"] == c_knee), None)
-    j_curve = j["curve"]
-    if c_at and j_curve and c_knee > 0:
+    b_at = next((r for r in base["curve"] if r["nominal_rps"] == b_knee), None)
+    t_curve = treat["curve"]
+    if b_at and t_curve and b_knee > 0:
         # latency comparison at ~1.3x the baseline's knee, as in the paper
-        j_at = min(j_curve,
-                   key=lambda r: abs(r["nominal_rps"] - c_knee * 1.3))
+        t_at = min(t_curve,
+                   key=lambda r: abs(r["nominal_rps"] - b_knee * 1.3))
         for key, short in (("median_ms", "median_speedup"),
                            ("p99_ms", "p99_speedup")):
-            x = c_at[key] / j_at[key]
+            x = b_at[key] / t_at[key]
             claims[short] = {"measured": round(x, 2),
                              "paper": PAPER_FIG6[short],
                              "delta": round(x - PAPER_FIG6[short], 2)}
     return claims
 
 
-def _coldstart_claims(backends: Dict[str, dict]) -> Dict[str, dict]:
-    c, j = backends["containerd"], backends["junctiond"]
-    ji, ci = j["single_deploy_ms"], c["single_deploy_ms"]
+def _coldstart_claims(base: dict, treat: dict) -> Dict[str, dict]:
+    ti, bi = treat["single_deploy_ms"], base["single_deploy_ms"]
     return {
-        "junction_init_ms": {"measured": round(ji, 3),
-                             "paper": PAPER_COLDSTART_JUNCTION_MS,
-                             "delta": round(ji - PAPER_COLDSTART_JUNCTION_MS, 3)},
-        "containerd_coldstart_ms": {"measured": round(ci, 3)},
-        "coldstart_ratio": {"measured": round(ci / ji, 1)},
+        "treatment_init_ms": {"measured": round(ti, 3),
+                              "paper": PAPER_COLDSTART_JUNCTION_MS,
+                              "delta": round(ti - PAPER_COLDSTART_JUNCTION_MS, 3)},
+        "baseline_coldstart_ms": {"measured": round(bi, 3)},
+        "coldstart_ratio": {"measured": round(bi / ti, 1)},
         "storm_speedup": {
-            "measured": round(c["median_ms"] / j["median_ms"], 1)},
+            "measured": round(base["median_ms"] / treat["median_ms"], 1)},
     }
 
 
@@ -276,13 +280,20 @@ _CLAIMS = {"fig5": _fig5_claims, "fig6": _fig6_claims,
 
 def _claim_metric_rows(sc: Scenario, backends: Dict[str, dict],
                        claims: Dict[str, dict]) -> List[dict]:
-    """Flat rows keeping the legacy CSV metric names stable."""
+    """Flat rows; names derive from the claims pair, so the default
+    containerd/junctiond pair keeps the CSV metric names stable — with
+    one deliberate rename: ``coldstart_junction_init`` is now
+    ``coldstart_junctiond_init`` (pair-derived), so pre-rename artifacts
+    need regenerating before they can serve as compare.py baselines."""
+    base_name, treat_name = sc.claims_pair
+    base, treat = backends[base_name], backends[treat_name]
     rows: List[dict] = []
     if sc.claims_kind == "fig5":
-        c, j = backends["containerd"], backends["junctiond"]
         rows += [
-            metric_row("fig5_containerd_median", c["median_ms"] * 1e3, "us e2e"),
-            metric_row("fig5_junctiond_median", j["median_ms"] * 1e3, "us e2e"),
+            metric_row(f"fig5_{base_name}_median",
+                       base["median_ms"] * 1e3, "us e2e"),
+            metric_row(f"fig5_{treat_name}_median",
+                       treat["median_ms"] * 1e3, "us e2e"),
         ]
         for name, key in (("fig5_median_reduction", "e2e_median"),
                           ("fig5_p99_reduction", "e2e_p99"),
@@ -293,11 +304,11 @@ def _claim_metric_rows(sc: Scenario, backends: Dict[str, dict],
                                    f"% vs paper {cl['paper']}%"))
     elif sc.claims_kind == "fig6":
         rows += [
-            metric_row("fig6_containerd_sustainable_rps",
-                       claims["containerd_knee_rps"]["measured"],
+            metric_row(f"fig6_{base_name}_sustainable_rps",
+                       claims["baseline_knee_rps"]["measured"],
                        f"rps at p99<={sc.slo_p99_ms:.0f}ms"),
-            metric_row("fig6_junctiond_sustainable_rps",
-                       claims["junctiond_knee_rps"]["measured"],
+            metric_row(f"fig6_{treat_name}_sustainable_rps",
+                       claims["treatment_knee_rps"]["measured"],
                        f"rps at p99<={sc.slo_p99_ms:.0f}ms"),
             metric_row("fig6_throughput_ratio",
                        claims["throughput_ratio"]["measured"], "x (paper ~10x)"),
@@ -311,17 +322,17 @@ def _claim_metric_rows(sc: Scenario, backends: Dict[str, dict],
             ]
     elif sc.claims_kind == "coldstart":
         rows += [
-            metric_row("coldstart_junction_init",
-                       claims["junction_init_ms"]["measured"] * 1e3,
+            metric_row(f"coldstart_{treat_name}_init",
+                       claims["treatment_init_ms"]["measured"] * 1e3,
                        "us (paper 3.4ms)"),
-            metric_row("coldstart_containerd",
-                       claims["containerd_coldstart_ms"]["measured"] * 1e3, "us"),
+            metric_row(f"coldstart_{base_name}",
+                       claims["baseline_coldstart_ms"]["measured"] * 1e3, "us"),
             metric_row("coldstart_ratio",
                        claims["coldstart_ratio"]["measured"],
-                       "x containerd/junction"),
+                       f"x {base_name}/{treat_name}"),
             metric_row("coldstart_storm_speedup",
                        claims["storm_speedup"]["measured"],
-                       f"x, {backends['junctiond']['functions']} concurrent deploys"),
+                       f"x, {treat['functions']} concurrent deploys"),
         ]
     return rows
 
@@ -378,11 +389,15 @@ class ExperimentRunner:
                 "description": sc.description,
                 "arrival_kind": sc.arrival.kind,
                 "tags": list(sc.tags),
+                "backend_set": sorted(sc.backends),
+                "claims_pair": list(sc.claims_pair),
                 "backends": backends,
             }
-            complete = all(b in backends for b in sc.backends)
-            if sc.claims_kind and complete:
-                claims = _CLAIMS[sc.claims_kind](backends)
+            pair_ok = all(b in backends for b in sc.claims_pair)
+            if sc.claims_kind and pair_ok:
+                base, treat = sc.claims_pair
+                claims = _CLAIMS[sc.claims_kind](backends[base],
+                                                 backends[treat])
                 entry["claims"] = claims
                 metrics.extend(_claim_metric_rows(sc, backends, claims))
             for backend, res in backends.items():
@@ -400,6 +415,7 @@ class ExperimentRunner:
             "workers": self.workers,
             "wall_s": round(time.time() - t0, 2),
             "n_scenarios": len(scenarios),
+            "backends": sorted({b for sc in scenarios for b in sc.backends}),
         }
         return build_artifact(suite, out_scenarios, metrics, failures,
                               duration_scale=self.duration_scale, meta=meta)

@@ -17,7 +17,12 @@ from repro.core.workload import (ArrivalProcess, BurstyArrivals,
                                  DiurnalArrivals, PoissonArrivals,
                                  TraceReplay)
 
-BACKENDS = ("containerd", "junctiond")
+# Default matrix: the paper's pair.  Scenarios can widen this to any set
+# of registered backend names (see repro.core.backends), and the runner
+# computes paper-claim deltas from ``claims_pair`` regardless of how many
+# other backends ride along.
+DEFAULT_BACKENDS = ("containerd", "junctiond")
+DEFAULT_CLAIMS_PAIR = ("containerd", "junctiond")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,7 +106,10 @@ class Scenario:
     n_cores: int = 10
     slo_p99_ms: float = 10.0
     storm_functions: int = 16
-    backends: Tuple[str, ...] = BACKENDS
+    backends: Tuple[str, ...] = DEFAULT_BACKENDS
+    # (baseline, treatment) pair the paper-claim reductions are computed
+    # from; claims are skipped when the pair is not part of the run.
+    claims_pair: Tuple[str, str] = DEFAULT_CLAIMS_PAIR
     claims_kind: Optional[str] = None     # "fig5" | "fig6" | "coldstart"
     tags: Tuple[str, ...] = ()
 
@@ -112,9 +120,12 @@ class Scenario:
         return [f.name for f in self.functions]
 
     def rates_for(self, backend: str, smoke: bool = False) -> Sequence[float]:
+        """Rate grid for one backend; the ``"*"`` key is the fallback grid
+        for backends without an explicit entry (lets a scenario run
+        against any registered backend)."""
         table = (self.smoke_rates if smoke and self.smoke_rates
                  else self.rates) or {}
-        return table.get(backend, ())
+        return table.get(backend, table.get("*", ()))
 
 def zipf_mix(n_functions: int, zipf_a: float = 1.5,
              work_us: float = AES_600B_WORK_US,

@@ -4,8 +4,10 @@ Scenario backlog rationale: production FaaS platforms are defined by
 workload diversity — paper Fig 5/6 cover a single warm function, FaaSNet
 motivates bursty provisioning storms, Shahrad et al. motivate long-tail
 multi-tenancy, and model serving adds ms-scale service times where the
-runtime overhead question changes shape.  Every scenario here runs on both
-backends so each suite is a containerd-vs-junctiond matrix.
+runtime overhead question changes shape.  Every scenario runs across its
+backend matrix (the paper's containerd-vs-junctiond pair by default;
+``--backends`` widens it to any registered set, e.g. quark/wasm) with
+paper-claim deltas always computed from the scenario's claims pair.
 """
 from __future__ import annotations
 
@@ -66,9 +68,13 @@ def build_scenarios() -> Dict[str, Scenario]:
             arrival=ArrivalSpec("poisson"),
             rates={"containerd": (500.0, 1000.0, 1250.0, 1500.0, 1750.0),
                    "junctiond": (2000.0, 5000.0, 9000.0, 12000.0, 13000.0,
-                                 14000.0)},
+                                 14000.0),
+                   "quark": (250.0, 500.0, 750.0, 1000.0, 1250.0),
+                   "wasm": (500.0, 1000.0, 1500.0, 1750.0, 2000.0)},
             smoke_rates={"containerd": (1000.0, 1500.0, 1750.0),
-                         "junctiond": (2000.0, 9000.0, 12000.0)},
+                         "junctiond": (2000.0, 9000.0, 12000.0),
+                         "quark": (500.0, 750.0, 1000.0),
+                         "wasm": (1000.0, 1500.0, 2000.0)},
             duration_s=1.5, seeds=(3,), slo_p99_ms=10.0, claims_kind="fig6",
             tags=("paper", "throughput")),
         Scenario(
@@ -85,8 +91,10 @@ def build_scenarios() -> Dict[str, Scenario]:
             mode="open", functions=zipf_mix(32),
             arrival=ArrivalSpec("poisson"),
             rates={"containerd": (600.0, 1000.0, 1400.0),
-                   "junctiond": (1500.0, 4000.0, 8000.0)},
-            smoke_rates={"containerd": (1000.0,), "junctiond": (4000.0,)},
+                   "junctiond": (1500.0, 4000.0, 8000.0),
+                   "*": (600.0, 1000.0, 1400.0)},
+            smoke_rates={"containerd": (1000.0,), "junctiond": (4000.0,),
+                         "*": (1000.0,)},
             duration_s=1.0, n_cores=36, seeds=(0,), slo_p99_ms=10.0,
             tags=("multitenant",)),
         Scenario(
@@ -97,8 +105,10 @@ def build_scenarios() -> Dict[str, Scenario]:
             arrival=ArrivalSpec("bursty", quiet_frac=0.25,
                                 mean_quiet_s=0.20, mean_burst_s=0.05),
             rates={"containerd": (400.0, 800.0, 1200.0),
-                   "junctiond": (1500.0, 4000.0, 8000.0)},
-            smoke_rates={"containerd": (800.0,), "junctiond": (4000.0,)},
+                   "junctiond": (1500.0, 4000.0, 8000.0),
+                   "*": (400.0, 800.0, 1200.0)},
+            smoke_rates={"containerd": (800.0,), "junctiond": (4000.0,),
+                         "*": (800.0,)},
             duration_s=1.2, seeds=(1,), slo_p99_ms=10.0,
             tags=("bursty",)),
         Scenario(
@@ -108,8 +118,10 @@ def build_scenarios() -> Dict[str, Scenario]:
             mode="open", functions=(FunctionProfile("aes", max_cores=8),),
             arrival=ArrivalSpec("diurnal", amplitude=0.8, period_s=0.5),
             rates={"containerd": (600.0, 1000.0),
-                   "junctiond": (2000.0, 6000.0)},
-            smoke_rates={"containerd": (1000.0,), "junctiond": (6000.0,)},
+                   "junctiond": (2000.0, 6000.0),
+                   "*": (600.0, 1000.0)},
+            smoke_rates={"containerd": (1000.0,), "junctiond": (6000.0,),
+                         "*": (1000.0,)},
             duration_s=1.0, seeds=(2,), slo_p99_ms=10.0,
             tags=("diurnal",)),
         Scenario(
@@ -121,8 +133,10 @@ def build_scenarios() -> Dict[str, Scenario]:
                                        max_cores=8, heavy_tail_alpha=1.5),),
             arrival=ArrivalSpec("poisson"),
             rates={"containerd": (400.0, 800.0, 1200.0),
-                   "junctiond": (1500.0, 4000.0, 8000.0)},
-            smoke_rates={"containerd": (800.0,), "junctiond": (4000.0,)},
+                   "junctiond": (1500.0, 4000.0, 8000.0),
+                   "*": (400.0, 800.0, 1200.0)},
+            smoke_rates={"containerd": (800.0,), "junctiond": (4000.0,),
+                         "*": (800.0,)},
             duration_s=1.0, seeds=(4,), slo_p99_ms=25.0,
             tags=("heavytail",)),
         Scenario(
@@ -131,7 +145,7 @@ def build_scenarios() -> Dict[str, Scenario]:
                         "(provisioning-trace stand-in, ~640 rps mean)",
             mode="open", functions=(FunctionProfile("aes", max_cores=8),),
             arrival=ArrivalSpec("trace", trace_s=_trace_burst_train()),
-            rates={"containerd": (0.0,), "junctiond": (0.0,)},
+            rates={"*": (0.0,)},      # the trace fixes the rate
             duration_s=1.2, seeds=(0,), slo_p99_ms=25.0,
             tags=("trace",)),
         Scenario(

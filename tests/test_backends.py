@@ -1,0 +1,418 @@
+"""Execution-backend API tests: the registry, a parametrized conformance
+suite every registered backend must pass (uniform deploy/scale/query/
+remove lifecycle semantics), the fig5-style latency and cold-start
+orderings across the 4-backend matrix, the runner on arbitrary backend
+sets, and the artifact-compare / --list tooling."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (FaasdRuntime, FunctionSpec, PollingModel, Simulator,
+                        UnknownFunctionError, available_backends,
+                        get_backend_class, register_backend, run_sequential)
+from repro.core.backends import (ColdStartModel, ExecutionBackend, _REGISTRY,
+                                 resolve_backend)
+from repro.experiments import (ExperimentRunner, build_artifact, get_scenario,
+                               metric_row, validate_artifact, write_artifact)
+
+ALL_BACKENDS = available_backends()
+FOUR = ("containerd", "junctiond", "quark", "wasm")
+
+
+def _drive(sim, gen):
+    """Run one generator process to completion and return its result."""
+    p = sim.process(gen)
+    p.completion.callbacks.append(lambda _v: sim.stop())
+    sim.run()
+    assert p.done
+    return p.result
+
+
+def _runtime(backend, seed=0, **kw):
+    sim = Simulator(seed=seed)
+    return FaasdRuntime(sim, backend=backend, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+
+
+def test_registry_contains_the_four_builtins():
+    assert set(ALL_BACKENDS) >= set(FOUR)
+
+
+def test_unknown_backend_name_lists_registered():
+    with pytest.raises(ValueError, match="containerd.*junctiond"):
+        get_backend_class("bogus")
+    with pytest.raises(ValueError, match="unknown backend"):
+        FaasdRuntime(Simulator(), backend="bogus")
+
+
+def test_register_backend_rejects_duplicate_and_unnamed():
+    containerd = get_backend_class("containerd")
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend(type("Fake", (containerd,), {"name": "containerd"}))
+    with pytest.raises(ValueError, match="non-empty"):
+        register_backend(type("Anon", (containerd,), {"name": ""}))
+    assert _REGISTRY["containerd"] is containerd    # registry unharmed
+
+
+def test_custom_backend_registers_and_serves_traffic():
+    wasm = get_backend_class("wasm")
+
+    @register_backend
+    class TurboTest(wasm):
+        name = "turbo-test"
+        coldstart = ColdStartModel(deploy_ms=0.1, scale_factor=0.5,
+                                   query_ms=0.05)
+
+        def __init__(self, sim, *, n_cores=4, polling_model=None):
+            super().__init__(sim, n_cores=n_cores)
+
+    try:
+        assert "turbo-test" in available_backends()
+        rt = _runtime("turbo-test")
+        # the class's own constructor default wins when resolved by name
+        assert rt.cores.n_cores == 4
+        rt.deploy_blocking(FunctionSpec(name="f"))
+        s = run_sequential(rt, "f", n=5)
+        assert s.n == 5 and s.median_ms > 0
+    finally:
+        _REGISTRY.pop("turbo-test", None)
+
+
+def test_runtime_accepts_backend_instance():
+    sim = Simulator(seed=0)
+    be = get_backend_class("containerd")(sim, n_cores=8)
+    rt = FaasdRuntime(sim, backend=be)
+    assert rt.backend is be and rt.manager is be
+    assert rt.backend_name == "containerd"
+    assert rt.cores.n_cores == 8
+    assert resolve_backend(be, sim) is be
+
+
+def test_backend_instance_must_match_simulator_and_config():
+    sim = Simulator(seed=0)
+    be = get_backend_class("containerd")(sim, n_cores=8)
+    # bound to a different simulator -> diagnosable error, not a hang
+    with pytest.raises(ValueError, match="different Simulator"):
+        FaasdRuntime(Simulator(seed=1), backend=be)
+    # conflicting config alongside a ready instance -> rejected, not ignored
+    with pytest.raises(ValueError, match="configure the instance"):
+        FaasdRuntime(sim, backend=be, n_cores=36)
+    with pytest.raises(ValueError, match="configure the instance"):
+        resolve_backend(be, sim, polling_model=PollingModel.CENTRALIZED)
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle conformance: every registered backend, same semantics.
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_backend_declares_its_bundle(name):
+    cls = get_backend_class(name)
+    assert cls.name == name
+    assert cls.runtime.name and cls.stack_costs.name
+    assert cls.coldstart.deploy_ms > 0
+    assert cls.coldstart.query_ms > 0
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_lifecycle_deploy_query_scale_remove(name):
+    rt = _runtime(name)
+    be, sim = rt.backend, rt.sim
+    sched_before = len(be.scheduler.instances) if be.scheduler else None
+    assert be.lookup("aes") is None
+
+    rt.deploy_blocking(FunctionSpec(name="aes", scale=2))
+    rec = be.lookup("aes")
+    assert rec is not None and rec.ready and rec.replicas == 2
+    assert be.deploys == 1
+
+    # control-plane query: same record, after the backend's RPC delay
+    t0 = sim.now
+    assert _drive(sim, be.query("aes")) is rec
+    assert sim.now - t0 == pytest.approx(be.coldstart.query_seconds)
+
+    # scale up then down; the record tracks the replica count
+    _drive(sim, be.scale("aes", 5))
+    assert be.lookup("aes").replicas == 5
+    _drive(sim, be.scale("aes", 1))
+    assert be.lookup("aes").replicas == 1
+
+    # remove releases every resource: record gone, query says None,
+    # scheduler-managed instances unregistered, and a redeploy works
+    be.remove("aes")
+    assert be.lookup("aes") is None
+    assert _drive(sim, be.query("aes")) is None
+    if sched_before is not None:
+        assert len(be.scheduler.instances) == sched_before
+    be.remove("aes")                      # idempotent teardown
+    rt.deploy_blocking(FunctionSpec(name="aes"))
+    assert be.lookup("aes").ready
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_redeploy_releases_old_resources(name):
+    """Deploying an existing name again must release the first
+    deployment's resources (scheduler registrations, reserved cores),
+    exactly as remove would — no leaks on config updates."""
+    rt = _runtime(name)
+    be = rt.backend
+    sched_before = len(be.scheduler.instances) if be.scheduler else None
+    rt.deploy_blocking(FunctionSpec(name="aes"))
+    rt.deploy_blocking(FunctionSpec(name="aes", scale=2))
+    assert be.deploys == 2
+    assert be.lookup("aes").replicas == 2
+    if sched_before is not None:
+        assert len(be.scheduler.instances) == sched_before + 1
+
+
+def test_junctiond_scale_to_zero_keeps_one_warm_uproc():
+    """Scale-to-zero semantics match the isolated path: the record says
+    zero replicas but one warm uProc stays behind."""
+    rt = _runtime("junctiond")
+    be = rt.backend
+    rt.deploy_blocking(FunctionSpec(name="aes", scale=3))
+    _drive(rt.sim, be.scale("aes", 0))
+    rec = be.lookup("aes")
+    assert rec.replicas == 0
+    assert len(rec.instances[0].uprocs) == 1 and rec.ready
+
+
+def test_junctiond_isolated_scale_reaps_sibling_instances():
+    """Scale on an isolate_replicas deployment adjusts the *instance*
+    count — including releasing scheduler registrations on the way down
+    (the lifecycle asymmetry the conformance work exists to prevent)."""
+    rt = _runtime("junctiond")
+    be, sim = rt.backend, rt.sim
+    base = len(be.scheduler.instances)
+    _drive(sim, be.deploy("iso", scale=4, isolate_replicas=True))
+    rec = be.lookup("iso")
+    assert rec.isolated and len(rec.instances) == 4
+    assert len(be.scheduler.instances) == base + 4
+
+    t0 = sim.now
+    _drive(sim, be.scale("iso", 1))
+    assert rec.replicas == 1 and len(rec.instances) == 1
+    assert len(be.scheduler.instances) == base + 1
+    assert sim.now == t0                      # reaping costs no init time
+
+    t0 = sim.now
+    _drive(sim, be.scale("iso", 3))           # back up: full instance inits
+    assert len(rec.instances) == 3 and rec.ready
+    assert len(be.scheduler.instances) == base + 3
+    assert sim.now - t0 == pytest.approx(2 * be.coldstart.deploy_seconds)
+
+    be.remove("iso")
+    assert len(be.scheduler.instances) == base
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_scale_on_undeployed_raises_uniformly(name):
+    rt = _runtime(name)
+    with pytest.raises(UnknownFunctionError, match="ghost"):
+        _drive(rt.sim, rt.backend.scale("ghost", 2))
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_warm_invocations_complete_with_ordered_timestamps(name):
+    rt = _runtime(name)
+    rt.deploy_blocking(FunctionSpec(name="aes"))
+    run_sequential(rt, "aes", n=5)
+    assert len(rt.records) == 5
+    for r in rt.records:
+        assert r.t_done > r.t_end_exec > r.t_start_exec > r.t_arrival
+
+
+# ---------------------------------------------------------------------------
+# Cross-backend orderings (the fig5-style sanity matrix).
+
+
+def _fig5_median_ms(name, seeds=range(3), n=60):
+    meds = []
+    for seed in seeds:
+        rt = _runtime(name, seed=seed)
+        rt.deploy_blocking(FunctionSpec(name="aes"))
+        meds.append(run_sequential(rt, "aes", n=n).median_ms)
+    return float(np.mean(meds))
+
+
+def test_fig5_style_warm_latency_ordering():
+    """Warm e2e medians follow the modeled datapaths: kernel-bypass
+    (junctiond) fastest, lightweight wasm beats containers, and quark's
+    interception tax makes it the slowest."""
+    med = {b: _fig5_median_ms(b) for b in FOUR}
+    assert med["junctiond"] < med["wasm"] < med["containerd"] < med["quark"]
+
+
+def test_coldstart_ordering_across_backends():
+    """Cold starts follow the modeled classes: sub-ms wasm instantiate,
+    paper-measured 3.4 ms Junction init, container-class containerd, and
+    quark's extra guest-kernel boot on top."""
+    def cold_s(name):
+        rt = _runtime(name)
+        t0 = rt.sim.now
+        rt.deploy_blocking(FunctionSpec(name="f"))
+        return rt.sim.now - t0
+
+    cold = {b: cold_s(b) for b in FOUR}
+    assert cold["wasm"] < 1e-3                       # sub-ms instantiate
+    assert cold["wasm"] < cold["junctiond"] < cold["containerd"] < cold["quark"]
+    assert cold["containerd"] / cold["junctiond"] > 50
+
+
+# ---------------------------------------------------------------------------
+# Experiments layer over arbitrary backend sets.
+
+
+def test_runner_four_backend_matrix_keeps_pair_claims(tmp_path):
+    sc = dataclasses.replace(get_scenario("paper-fig5"), seeds=(0,),
+                             n_requests=25, backends=FOUR)
+    doc = ExperimentRunner(smoke=True).run_suite([sc], suite="unit")
+    validate_artifact(doc)
+    entry = doc["scenarios"][0]
+    assert set(entry["backends"]) == set(FOUR)
+    assert entry["backend_set"] == sorted(FOUR)
+    assert entry["claims_pair"] == ["containerd", "junctiond"]
+    # paper-claim deltas still come from the baseline/treatment pair
+    assert "e2e_median_reduction_pct" in entry["claims"]
+    names = {m["name"] for m in doc["metrics"]}
+    assert "fig5_median_reduction" in names
+    for b in FOUR:                       # every backend lands in the flat table
+        assert f"scn_paper-fig5_{b}_median" in names
+    path = tmp_path / "BENCH_matrix.json"
+    write_artifact(str(path), doc)
+    validate_artifact(json.loads(path.read_text()))
+
+
+def test_runner_skips_claims_without_the_pair():
+    sc = dataclasses.replace(get_scenario("paper-fig5"), seeds=(0,),
+                             n_requests=20, backends=("quark", "wasm"))
+    doc = ExperimentRunner(smoke=True).run_suite([sc], suite="unit")
+    validate_artifact(doc)
+    entry = doc["scenarios"][0]
+    assert set(entry["backends"]) == {"quark", "wasm"}
+    assert "claims" not in entry
+    assert all(not m["name"].startswith("fig5_") for m in doc["metrics"])
+
+
+def test_open_mode_fails_loudly_without_a_rate_grid():
+    """A backend with neither an explicit grid nor a '*' fallback must
+    fail its cell (caught in the artifact's failures) rather than emit a
+    zero-sample result with NaN medians."""
+    sc = dataclasses.replace(get_scenario("paper-fig6"),
+                             backends=("containerd", "junctiond", "quark",
+                                       "wasm", "turbo"))
+    doc = ExperimentRunner(smoke=True).run_suite([sc], suite="unit")
+    assert any(f["backend"] == "turbo" and "rate grid" in f["error"]
+               for f in doc["failures"])
+
+
+def test_validate_artifact_accepts_v1_schema():
+    """Artifacts written by older commits (schema_version 1, no
+    backend_set) must keep validating — they are compare.py baselines."""
+    v1 = build_artifact("old", [{"name": "s", "mode": "closed",
+                                 "description": "d", "backends": {}}],
+                        [metric_row("m", 1.0, "d")], [])
+    v1["schema_version"] = 1
+    validate_artifact(v1)                      # no backend_set required
+    v3 = dict(v1, schema_version=3)
+    with pytest.raises(ValueError, match="schema_version"):
+        validate_artifact(v3)
+
+
+def test_rates_fall_back_to_wildcard_grid():
+    sc = get_scenario("multi-tenant-mix")
+    assert sc.rates_for("junctiond") == (1500.0, 4000.0, 8000.0)
+    assert sc.rates_for("quark") == sc.rates["*"]
+    assert sc.rates_for("wasm", smoke=True) == sc.smoke_rates["*"]
+    fig6 = get_scenario("paper-fig6")
+    for b in FOUR:                  # fig6 grids are explicit per backend
+        assert fig6.rates_for(b)
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/compare.py: artifact diffing for CI.
+
+
+def _metrics_doc(**values):
+    return build_artifact("unit", [], [metric_row(k, v, "d")
+                                       for k, v in values.items()], [])
+
+
+def test_compare_flags_regressions_in_both_directions():
+    from benchmarks.compare import compare_metrics, regressions
+    old = _metrics_doc(fig5_junctiond_median=500.0, fig6_throughput_ratio=10.0,
+                       coldstart_ratio=130.0)
+    new = _metrics_doc(fig5_junctiond_median=700.0, fig6_throughput_ratio=4.0,
+                       coldstart_ratio=131.0)
+    rows, new_only = compare_metrics(old, new, threshold=0.10)
+    by = {r["name"]: r for r in rows}
+    assert by["fig5_junctiond_median"]["status"] == "regressed"   # latency up
+    assert by["fig6_throughput_ratio"]["status"] == "regressed"   # ratio down
+    assert by["coldstart_ratio"]["status"] == "ok"                # within noise
+    assert not new_only
+    assert {r["name"] for r in regressions(rows)} == {
+        "fig5_junctiond_median", "fig6_throughput_ratio"}
+
+
+def test_compare_improvements_and_new_metrics_are_not_regressions():
+    from benchmarks.compare import compare_metrics, regressions
+    old = _metrics_doc(fig5_junctiond_median=500.0)
+    new = _metrics_doc(fig5_junctiond_median=300.0, extra_metric=1.0)
+    rows, new_only = compare_metrics(old, new)
+    assert rows[0]["status"] == "improved"
+    assert new_only == ["extra_metric"]
+    assert not regressions(rows)
+
+
+def test_compare_missing_and_nan_metrics_regress():
+    from benchmarks.compare import compare_metrics, regressions
+    old = _metrics_doc(kept=1.0, dropped=2.0, lost_value=3.0)
+    new = _metrics_doc(kept=1.0, lost_value=float("nan"))
+    rows, _ = compare_metrics(old, new)
+    by = {r["name"]: r for r in rows}
+    assert by["dropped"]["status"] == "missing"
+    assert by["lost_value"]["status"] == "nan"     # value became null
+    assert len(regressions(rows)) == 2
+
+
+def test_compare_cli_exit_codes(tmp_path):
+    from benchmarks.compare import main
+    old = tmp_path / "old.json"
+    good = tmp_path / "good.json"
+    bad = tmp_path / "bad.json"
+    write_artifact(str(old), _metrics_doc(fig6_throughput_ratio=10.0))
+    write_artifact(str(good), _metrics_doc(fig6_throughput_ratio=9.8))
+    write_artifact(str(bad), _metrics_doc(fig6_throughput_ratio=3.0))
+    assert main([str(old), str(good)]) == 0
+    assert main([str(old), str(bad), "--threshold", "0.2"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py --list: enumeration without execution.
+
+
+def test_run_list_enumerates_backends_and_scenarios(capsys):
+    from benchmarks.run import main
+    assert main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for b in FOUR:
+        assert b in out
+    assert "paper-fig6" in out and "rates[" in out
+    assert "smoke" in out
+
+
+def test_run_rejects_unknown_backends_flag(capsys):
+    from benchmarks.run import main
+    with pytest.raises(SystemExit):
+        main(["--suite", "smoke", "--backends", "containerd,nope"])
+
+
+def test_parse_backends_dedupes_preserving_order():
+    from benchmarks.run import _parse_backends
+    assert _parse_backends("junctiond,containerd, junctiond ,containerd") == \
+        ("junctiond", "containerd")
