@@ -106,10 +106,11 @@ def run_list(args) -> int:
               f"coldstart={cs.deploy_ms:g}ms query={cs.query_ms:g}ms")
     print("\nscenarios:")
     for name, sc in sorted(build_scenarios().items()):
+        asc = sc.autoscaler.policy if sc.autoscaler else "-"
         print(f"  {name:17s} mode={sc.mode:6s} arrival={sc.arrival.kind:8s} "
               f"backends={','.join(sc.backends)} "
-              f"claims={sc.claims_kind or '-'}")
-        if sc.mode == "open" and sc.rates:
+              f"claims={sc.claims_kind or '-'} autoscaler={asc}")
+        if sc.mode in ("open", "mixed") and sc.rates:
             for b, grid in sorted(sc.rates.items()):
                 print(f"    rates[{b}] = {', '.join(f'{r:g}' for r in grid)}")
     print("\nsuites:")
@@ -143,6 +144,10 @@ def run_scenarios(args) -> int:
             if isinstance(res.get("median_ms"), float):
                 bits.append(f"median={res['median_ms']:.3f}ms")
                 bits.append(f"p99={res['p99_ms']:.3f}ms")
+            if "autoscaler" in res:
+                a = res["autoscaler"]
+                bits.append(f"scale_events={a['n_scale_events']} "
+                            f"reaction_p50={a['reaction_p50_ms']:.1f}ms")
             bits.append(f"[{res.get('elapsed_s', 0):.1f}s]")
             print(f"  {backend:11s} " + " ".join(bits))
         for key, cl in entry.get("claims", {}).items():

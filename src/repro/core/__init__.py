@@ -4,7 +4,8 @@
 # a registry of pluggable execution backends (containerd, junctiond, and
 # the modeled quark/wasm backends from related work), the network
 # datapaths, and the centralized polling scheduler.
-from repro.core.autoscaler import Autoscaler, ScalePolicy
+from repro.core.autoscaler import (Autoscaler, LeadTimePolicy,
+                                   QueueDepthPolicy, ScaleEvent, ScalePolicy)
 from repro.core.backends import (ColdStartModel, ExecutionBackend,
                                  UnknownFunctionError, available_backends,
                                  get_backend_class, register_backend,
@@ -27,7 +28,8 @@ from repro.core.workload import (ArrivalProcess, BurstyArrivals,
                                  run_sequential, sustainable_throughput)
 
 __all__ = [
-    "Autoscaler", "ScalePolicy",
+    "Autoscaler", "ScalePolicy", "QueueDepthPolicy", "LeadTimePolicy",
+    "ScaleEvent",
     "ColdStartModel", "ExecutionBackend", "UnknownFunctionError",
     "available_backends", "get_backend_class", "register_backend",
     "resolve_backend",

@@ -64,8 +64,16 @@ def run_sequential(runtime: FaasdRuntime, fn_name: str, n: int = 100,
 
 def run_open_loop(runtime: FaasdRuntime, fn_name: str, rate_rps: float,
                   duration_s: float = 2.0, warmup_s: float = 0.3,
-                  max_outstanding: int = 20000) -> Dict[str, float]:
-    """Fig 6 methodology: Poisson open-loop arrivals at an offered rate."""
+                  max_outstanding: int = 20000,
+                  on_arrival: Optional[Callable[[str], None]] = None,
+                  on_done: Optional[Callable[[str], None]] = None,
+                  ) -> Dict[str, float]:
+    """Fig 6 methodology: Poisson open-loop arrivals at an offered rate.
+
+    ``on_arrival``/``on_done`` fire per admitted request (rejected
+    arrivals never reach them) — the hooks an autoscaler's load signal
+    plugs into without scenario-specific glue.
+    """
     sim = runtime.sim
     outstanding = [0]
 
@@ -77,10 +85,14 @@ def run_open_loop(runtime: FaasdRuntime, fn_name: str, rate_rps: float,
                 runtime.rejected += 1
                 continue
             outstanding[0] += 1
+            if on_arrival is not None:
+                on_arrival(fn_name)
 
             def one():
                 yield from runtime.invoke(fn_name)
                 outstanding[0] -= 1
+                if on_done is not None:
+                    on_done(fn_name)
 
             sim.process(one())
 
@@ -258,11 +270,17 @@ def run_mixed_open_loop(runtime: FaasdRuntime, fn_names: Sequence[str],
                         weights: Sequence[float], arrivals: ArrivalProcess,
                         duration_s: float, warmup_frac: float = 0.2,
                         max_outstanding: int = 20000,
-                        drain_s: float = 2.0) -> Dict[str, object]:
+                        drain_s: float = 2.0,
+                        on_arrival: Optional[Callable[[str], None]] = None,
+                        on_done: Optional[Callable[[str], None]] = None,
+                        ) -> Dict[str, object]:
     """Open-loop run of ``arrivals`` over a weighted function mix.
 
     Generalizes ``run_open_loop`` (single fn, Poisson) to arbitrary arrival
     processes and multi-tenant mixes; returns overall + per-function stats.
+    ``on_arrival``/``on_done`` fire per admitted request (rejected
+    arrivals never reach them) so any open-loop driver can feed an
+    autoscaler's load signal.
     """
     sim = runtime.sim
     w = np.asarray(weights, dtype=np.float64)
@@ -280,10 +298,14 @@ def run_mixed_open_loop(runtime: FaasdRuntime, fn_names: Sequence[str],
                 runtime.rejected += 1
                 continue
             outstanding[0] += 1
+            if on_arrival is not None:
+                on_arrival(fn_names[pick])
 
             def one(fn=fn_names[pick]):
                 yield from runtime.invoke(fn)
                 outstanding[0] -= 1
+                if on_done is not None:
+                    on_done(fn)
 
             sim.process(one())
 

@@ -17,17 +17,23 @@ import numpy as np
 # v2: scenario entries record the configured backend matrix
 # (``backend_set``) and the (baseline, treatment) ``claims_pair`` next to
 # the per-backend results, so artifact consumers never have to assume the
-# containerd/junctiond pair.  v1 artifacts (written by older commits, the
-# trendline baseline case) still validate: the v2-only keys are required
-# only when the document says schema_version 2.
-SCHEMA_VERSION = 2
-_SUPPORTED_SCHEMA_VERSIONS = (1, 2)
+# containerd/junctiond pair.
+# v3: control-plane telemetry — a per-backend result may carry an
+# ``autoscaler`` block (scale-event counts, scale-up reaction-time
+# percentiles, cold starts, replica timeline); when present it must have
+# the keys regression tooling reads.  Older artifacts (v1/v2, the
+# trendline baseline case) still validate: version-specific keys are
+# required only when the document declares that schema_version.
+SCHEMA_VERSION = 3
+_SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3)
 
 _REQUIRED_TOP = ("schema_version", "suite", "duration_scale", "scenarios",
                  "metrics", "failures", "meta")
 _REQUIRED_SCENARIO_V1 = ("name", "mode", "description", "backends")
 _REQUIRED_SCENARIO_V2 = _REQUIRED_SCENARIO_V1 + ("backend_set",)
 _REQUIRED_METRIC = ("name", "value", "derived")
+_REQUIRED_AUTOSCALER = ("policy", "n_scale_events", "cold_starts",
+                        "cold_path_arrivals", "reaction_p50_ms")
 
 
 def latency_histogram(lat_ms: Sequence[float], n_bins: int = 24) -> Dict[str, list]:
@@ -97,6 +103,18 @@ def validate_artifact(doc: Dict[str, object]) -> None:
                     if not isinstance(res, dict):
                         problems.append(f"scenarios[{i}].backends[{b}] "
                                         "must be an object")
+                        continue
+                    asc = res.get("autoscaler")
+                    if version == 3 and asc is not None:
+                        if not isinstance(asc, dict):
+                            problems.append(f"scenarios[{i}].backends[{b}]"
+                                            ".autoscaler must be an object")
+                        else:
+                            for key in _REQUIRED_AUTOSCALER:
+                                if key not in asc:
+                                    problems.append(
+                                        f"scenarios[{i}].backends[{b}]"
+                                        f".autoscaler missing {key!r}")
             else:
                 problems.append(f"scenarios[{i}].backends must be an object")
             backend_set = sc.get("backend_set")

@@ -8,6 +8,7 @@ runner itself only schedules work and reduces results into the artifact
 """
 from __future__ import annotations
 
+import dataclasses
 import multiprocessing
 import time
 import traceback
@@ -15,11 +16,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.autoscaler import Autoscaler
 from repro.core.faas import FaasdRuntime, FunctionSpec
 from repro.core.simulator import Simulator
 from repro.core.workload import (LatencySummary, heavy_tailed_work,
-                                 knee_of_curve, run_mixed_open_loop,
-                                 run_sequential)
+                                 knee_of_curve, percentile,
+                                 run_mixed_open_loop, run_sequential)
 from repro.experiments.artifacts import (build_artifact, latency_histogram,
                                          metric_row)
 from repro.experiments.scenario import FunctionProfile, Scenario
@@ -53,6 +55,37 @@ def _seeds(sc: Scenario, smoke: bool) -> Sequence[int]:
 
 def _mean(xs: Sequence[float]) -> float:
     return float(np.mean(xs)) if len(xs) else float("nan")
+
+
+def _make_autoscaler(sc: Scenario, rt: FaasdRuntime) -> Optional[Autoscaler]:
+    if sc.autoscaler is None:
+        return None
+    asc = Autoscaler(rt.sim, rt, sc.autoscaler.build())
+    asc.run()
+    return asc
+
+
+def _pool_autoscaler(runs: List[Dict[str, object]]) -> Dict[str, object]:
+    """Reduce per-run Autoscaler.telemetry() dicts into the artifact's
+    ``autoscaler`` block: counters summed, reaction times pooled into
+    percentiles, the first run's replica timeline kept as representative."""
+    reactions = [x for t in runs for x in t["reactions_ms"]]
+    return {
+        "policy": runs[0]["policy"],
+        "n_runs": len(runs),
+        "n_scale_events": int(sum(t["n_scale_events"] for t in runs)),
+        "n_up": int(sum(t["n_up"] for t in runs)),
+        "n_down": int(sum(t["n_down"] for t in runs)),
+        "n_aborted": int(sum(t["n_aborted"] for t in runs)),
+        "cold_starts": int(sum(t["cold_starts"] for t in runs)),
+        "cold_path_arrivals": int(sum(t["cold_path_arrivals"]
+                                      for t in runs)),
+        "reaction_p50_ms": percentile(reactions, 50),
+        "reaction_p99_ms": percentile(reactions, 99),
+        "reaction_mean_ms": _mean(reactions),
+        "reactions_ms": reactions[:500],
+        "timeline": runs[0]["timeline"][:200],
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -105,25 +138,38 @@ def _exec_open(sc: Scenario, backend: str, duration_scale: float,
             f"{backend!r}; add rates[{backend!r}] or a '*' fallback")
     curve: List[Dict[str, object]] = []
     pooled_by_rate: Dict[float, List[float]] = {}
+    asc_runs: List[Dict[str, object]] = []
     for rate in rates:
         per_seed: List[Dict[str, object]] = []
         lats: List[float] = []
+        row_telemetry: List[Dict[str, object]] = []
         for seed in _seeds(sc, smoke):
             sim = Simulator(seed=seed)
             rt = FaasdRuntime(sim, backend=backend, n_cores=sc.n_cores)
             _deploy_mix(rt, sc.functions)
+            asc = _make_autoscaler(sc, rt)
             res = run_mixed_open_loop(
                 rt, sc.fn_names(), sc.weights(), sc.arrival.build(rate),
-                duration_s=duration, warmup_frac=sc.warmup_frac)
+                duration_s=duration, warmup_frac=sc.warmup_frac,
+                on_arrival=asc.on_arrival if asc else None,
+                on_done=asc.on_done if asc else None)
             lats.extend(res.pop("latencies_ms"))
             res.pop("per_fn")
             per_seed.append(res)
+            if asc is not None:
+                row_telemetry.append(asc.telemetry())
         row = {"nominal_rps": float(rate)}
         for key in ("offered_rps", "achieved_rps", "median_ms", "p99_ms",
                     "mean_ms", "p999_ms"):
             row[key] = _mean([r[key] for r in per_seed])
         row["n"] = int(sum(r["n"] for r in per_seed))
         row["rejected"] = int(sum(r["rejected"] for r in per_seed))
+        if row_telemetry:
+            row["scale_events"] = int(sum(t["n_scale_events"]
+                                          for t in row_telemetry))
+            row["cold_path_arrivals"] = int(sum(t["cold_path_arrivals"]
+                                                for t in row_telemetry))
+            asc_runs.extend(row_telemetry)
         curve.append(row)
         pooled_by_rate[float(rate)] = lats
     knee = knee_of_curve(curve, sc.slo_p99_ms)
@@ -132,7 +178,7 @@ def _exec_open(sc: Scenario, backend: str, duration_scale: float,
     rep = next((r for r in curve if r["nominal_rps"] == knee), None)
     if rep is None and curve:
         rep = min(curve, key=lambda r: r["nominal_rps"])
-    return {
+    out = {
         "mode": "open",
         "duration_s": duration,
         "arrival_kind": sc.arrival.kind,
@@ -145,6 +191,9 @@ def _exec_open(sc: Scenario, backend: str, duration_scale: float,
         "hist": latency_histogram(
             pooled_by_rate.get(rep["nominal_rps"], []) if rep else []),
     }
+    if asc_runs:
+        out["autoscaler"] = _pool_autoscaler(asc_runs)
+    return out
 
 
 def _exec_storm(sc: Scenario, backend: str, duration_scale: float,
@@ -199,7 +248,108 @@ def _exec_storm(sc: Scenario, backend: str, duration_scale: float,
     }
 
 
-_MODES = {"closed": _exec_closed, "open": _exec_open, "storm": _exec_storm}
+def _exec_mixed(sc: Scenario, backend: str, duration_scale: float,
+                smoke: bool) -> Dict[str, object]:
+    """Steady warm traffic plus a provisioning storm on the same worker:
+    ``storm_functions`` deploy+invoke-train storms land mid-run while the
+    warm mix keeps arriving, measuring how much the cold path inflates
+    warm-path tail latency (and, with an autoscaler in the loop, how the
+    controller reacts to the combined pressure)."""
+    duration = max(0.5, sc.duration_s * duration_scale)
+    storm_t = duration * 0.25       # warm window established first
+    k = min(8, sc.storm_functions) if smoke else sc.storm_functions
+    rates = sc.rates_for(backend, smoke=smoke)
+    if not rates:
+        raise ValueError(
+            f"scenario {sc.name!r} has no rate grid for backend "
+            f"{backend!r}; add rates[{backend!r}] or a '*' fallback")
+    rate = float(rates[0])          # mixed mode runs one warm rate
+    warm_names = set(sc.fn_names())
+    per_seed: List[Dict[str, float]] = []
+    asc_runs: List[Dict[str, object]] = []
+    storm_deploy_ms: List[float] = []
+    storm_total_ms: List[float] = []
+    warm_lats_pooled: List[float] = []
+    for seed in _seeds(sc, smoke):
+        sim = Simulator(seed=seed)
+        rt = FaasdRuntime(sim, backend=backend, n_cores=sc.n_cores)
+        _deploy_mix(rt, sc.functions)
+        asc = _make_autoscaler(sc, rt)
+        t0 = sim.now
+        storm_done_t: List[float] = []
+
+        def one_storm(i, t0=t0, sim=sim, rt=rt, done=storm_done_t):
+            # staggered FaaSNet-style storm: deploy + a short invoke train
+            yield sim.timeout(storm_t + i * 0.002 - (sim.now - t0))
+            prof = sc.functions[i % len(sc.functions)]
+            spec = FunctionSpec(
+                name=f"storm-{prof.name}-{i}", work_us=prof.work_us,
+                payload_bytes=prof.payload_bytes,
+                response_bytes=prof.response_bytes, max_cores=prof.max_cores)
+            t_start = sim.now
+            yield from rt.deploy(spec)
+            storm_deploy_ms.append((sim.now - t_start) * 1e3)
+            for _ in range(4):
+                yield from rt.invoke(spec.name)
+                yield sim.timeout(0.001)
+            storm_total_ms.append((sim.now - t_start) * 1e3)
+            done.append(sim.now - t0)
+
+        for i in range(k):
+            sim.process(one_storm(i))
+        start_idx = len(rt.records)
+        run_mixed_open_loop(
+            rt, sc.fn_names(), sc.weights(),
+            sc.arrival.build(rate), duration_s=duration,
+            warmup_frac=sc.warmup_frac,
+            on_arrival=asc.on_arrival if asc else None,
+            on_done=asc.on_done if asc else None)
+        if asc is not None:
+            asc_runs.append(asc.telemetry())
+        warmup = sc.warmup_frac * duration
+        warm = [r for r in rt.records[start_idx:] if r.fn in warm_names
+                and r.t_arrival >= t0 + warmup]
+        storm_end = t0 + (max(storm_done_t) if storm_done_t else duration)
+        before = [r.e2e * 1e3 for r in warm
+                  if r.t_arrival < t0 + storm_t]
+        during = [r.e2e * 1e3 for r in warm
+                  if t0 + storm_t <= r.t_arrival <= storm_end]
+        lat = [r.e2e * 1e3 for r in warm]
+        warm_lats_pooled.extend(lat)
+        s = LatencySummary.of(lat)
+        p99_before = percentile(before, 99)
+        p99_during = percentile(during, 99)
+        per_seed.append({
+            "n": s.n, "median_ms": s.median_ms, "p99_ms": s.p99_ms,
+            "warm_median_before_ms": percentile(before, 50),
+            "warm_median_during_ms": percentile(during, 50),
+            "warm_p99_before_ms": p99_before,
+            "warm_p99_during_ms": p99_during,
+            "warm_p99_inflation": p99_during / p99_before,
+        })
+    out: Dict[str, object] = {
+        "mode": "mixed",
+        "duration_s": duration,
+        "storm_t_s": storm_t,
+        "storm_functions": k,
+        "warm_rps": rate,
+        "arrival_kind": sc.arrival.kind,
+        "n": int(sum(r["n"] for r in per_seed)),
+        "storm_deploy_median_ms": LatencySummary.of(storm_deploy_ms).median_ms,
+        "storm_total_median_ms": LatencySummary.of(storm_total_ms).median_ms,
+        "hist": latency_histogram(warm_lats_pooled),
+    }
+    for key in ("median_ms", "p99_ms", "warm_median_before_ms",
+                "warm_median_during_ms", "warm_p99_before_ms",
+                "warm_p99_during_ms", "warm_p99_inflation"):
+        out[key] = _mean([r[key] for r in per_seed])
+    if asc_runs:
+        out["autoscaler"] = _pool_autoscaler(asc_runs)
+    return out
+
+
+_MODES = {"closed": _exec_closed, "open": _exec_open, "storm": _exec_storm,
+          "mixed": _exec_mixed}
 
 
 def _run_backend(item: Tuple[Scenario, str, float, bool]):
@@ -274,8 +424,43 @@ def _coldstart_claims(base: dict, treat: dict) -> Dict[str, dict]:
     }
 
 
+def _autoscale_claims(base: dict, treat: dict) -> Dict[str, dict]:
+    """Scale-up reaction time (pressure onset -> new capacity ready): the
+    control-plane metric the cold-start asymmetry buys (FaaSNet's
+    provisioning-storm regime)."""
+    b, t = base["autoscaler"], treat["autoscaler"]
+    ratio = b["reaction_p50_ms"] / max(t["reaction_p50_ms"], 1e-9)
+    return {
+        "baseline_reaction_p50_ms": {"measured": round(b["reaction_p50_ms"], 3)},
+        "treatment_reaction_p50_ms": {"measured": round(t["reaction_p50_ms"], 3)},
+        "baseline_reaction_p99_ms": {"measured": round(b["reaction_p99_ms"], 3)},
+        "treatment_reaction_p99_ms": {"measured": round(t["reaction_p99_ms"], 3)},
+        "scaleup_reaction_ratio": {"measured": round(ratio, 1)},
+        "baseline_cold_path_arrivals": {
+            "measured": b["cold_path_arrivals"]},
+        "treatment_cold_path_arrivals": {
+            "measured": t["cold_path_arrivals"]},
+    }
+
+
+def _interference_claims(base: dict, treat: dict) -> Dict[str, dict]:
+    """Warm-path P99 inflation while a provisioning storm shares the
+    worker (cold/warm path coupling)."""
+    b_inf, t_inf = base["warm_p99_inflation"], treat["warm_p99_inflation"]
+    return {
+        "baseline_warm_p99_inflation": {"measured": round(b_inf, 3)},
+        "treatment_warm_p99_inflation": {"measured": round(t_inf, 3)},
+        "interference_reduction": {"measured": round(b_inf / max(t_inf, 1e-9), 3)},
+        "baseline_storm_total_ms": {
+            "measured": round(base["storm_total_median_ms"], 3)},
+        "treatment_storm_total_ms": {
+            "measured": round(treat["storm_total_median_ms"], 3)},
+    }
+
+
 _CLAIMS = {"fig5": _fig5_claims, "fig6": _fig6_claims,
-           "coldstart": _coldstart_claims}
+           "coldstart": _coldstart_claims, "autoscale": _autoscale_claims,
+           "interference": _interference_claims}
 
 
 def _claim_metric_rows(sc: Scenario, backends: Dict[str, dict],
@@ -333,6 +518,30 @@ def _claim_metric_rows(sc: Scenario, backends: Dict[str, dict],
             metric_row("coldstart_storm_speedup",
                        claims["storm_speedup"]["measured"],
                        f"x, {treat['functions']} concurrent deploys"),
+        ]
+    elif sc.claims_kind == "autoscale":
+        rows += [
+            metric_row(f"autoscale_{base_name}_reaction",
+                       claims["baseline_reaction_p50_ms"]["measured"],
+                       "ms scale-up reaction p50"),
+            metric_row(f"autoscale_{treat_name}_reaction",
+                       claims["treatment_reaction_p50_ms"]["measured"],
+                       "ms scale-up reaction p50"),
+            metric_row("autoscale_reaction_ratio",
+                       claims["scaleup_reaction_ratio"]["measured"],
+                       f"x {base_name}/{treat_name}"),
+        ]
+    elif sc.claims_kind == "interference":
+        rows += [
+            metric_row(f"mixed_{base_name}_warm_p99_inflation",
+                       claims["baseline_warm_p99_inflation"]["measured"],
+                       "x warm p99 during/before storm"),
+            metric_row(f"mixed_{treat_name}_warm_p99_inflation",
+                       claims["treatment_warm_p99_inflation"]["measured"],
+                       "x warm p99 during/before storm"),
+            metric_row("mixed_interference_reduction",
+                       claims["interference_reduction"]["measured"],
+                       f"x {base_name}/{treat_name} p99 inflation"),
         ]
     return rows
 
@@ -393,6 +602,8 @@ class ExperimentRunner:
                 "claims_pair": list(sc.claims_pair),
                 "backends": backends,
             }
+            if sc.autoscaler is not None:
+                entry["autoscaler_spec"] = dataclasses.asdict(sc.autoscaler)
             pair_ok = all(b in backends for b in sc.claims_pair)
             if sc.claims_kind and pair_ok:
                 base, treat = sc.claims_pair
@@ -408,6 +619,11 @@ class ExperimentRunner:
                     metrics.append(metric_row(
                         f"scn_{sc.name}_{backend}_p99",
                         res["p99_ms"] * 1e3, f"us ({sc.mode})"))
+                if "autoscaler" in res:
+                    metrics.append(metric_row(
+                        f"scn_{sc.name}_{backend}_scaleup_reaction",
+                        res["autoscaler"]["reaction_p50_ms"],
+                        "ms pressure->capacity-ready p50"))
             out_scenarios.append(entry)
 
         meta = {

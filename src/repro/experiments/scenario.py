@@ -12,6 +12,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.autoscaler import (LeadTimePolicy, QueueDepthPolicy,
+                                   ScalePolicy)
 from repro.core.latency import AES_600B_WORK_US
 from repro.core.workload import (ArrivalProcess, BurstyArrivals,
                                  DiurnalArrivals, PoissonArrivals,
@@ -81,6 +83,41 @@ class ArrivalSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class AutoscalerSpec:
+    """Recipe for putting an autoscaler in a scenario's control loop.
+
+    ``policy`` picks the :class:`~repro.core.autoscaler.ScalePolicy`
+    implementation: ``"queue-depth"`` (fixed ``period_s``) or
+    ``"lead-time"`` (control period and scale-up headroom derived from
+    the backend's ColdStartModel; ``period_s`` is ignored).  The runner
+    builds one fresh Autoscaler per (rate, seed) run and records its
+    scale-event telemetry into the artifact (schema v3).
+    """
+    policy: str = "lead-time"
+    min_replicas: int = 1
+    max_replicas: int = 16
+    target_inflight_per_replica: float = 4.0
+    scale_down_hysteresis: float = 0.5
+    period_s: float = 0.25              # queue-depth control period
+    period_floor_s: float = 0.01        # lead-time period bounds
+    period_ceil_s: float = 0.25
+    lead_mult: float = 2.0
+
+    def build(self) -> ScalePolicy:
+        common = dict(
+            min_replicas=self.min_replicas, max_replicas=self.max_replicas,
+            target_inflight_per_replica=self.target_inflight_per_replica,
+            scale_down_hysteresis=self.scale_down_hysteresis)
+        if self.policy == "queue-depth":
+            return QueueDepthPolicy(period_s=self.period_s, **common)
+        if self.policy == "lead-time":
+            return LeadTimePolicy(period_floor_s=self.period_floor_s,
+                                  period_ceil_s=self.period_ceil_s,
+                                  lead_mult=self.lead_mult, **common)
+        raise ValueError(f"unknown autoscaler policy {self.policy!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class Scenario:
     """A complete experiment: mix + arrivals + duration + backend matrix.
 
@@ -91,6 +128,14 @@ class Scenario:
         detection (paper Fig 6 methodology).
       * ``storm``  — ``storm_functions`` concurrent deploy+first-invoke
         (cold-start storm; FaaSNet's provisioning regime).
+      * ``mixed``  — steady warm traffic at ``rates[backend][0]`` plus a
+        ``storm_functions`` provisioning storm on the same worker mid-run
+        (warm-path interference; cold/warm path coupling).
+
+    An optional ``autoscaler`` spec puts a backend-aware autoscaler in
+    the control loop of ``open``/``mixed`` runs; its scale-event
+    telemetry (reaction times, replica timeline, cold starts) lands in
+    the artifact.
     """
     name: str
     description: str
@@ -106,6 +151,7 @@ class Scenario:
     n_cores: int = 10
     slo_p99_ms: float = 10.0
     storm_functions: int = 16
+    autoscaler: Optional[AutoscalerSpec] = None
     backends: Tuple[str, ...] = DEFAULT_BACKENDS
     # (baseline, treatment) pair the paper-claim reductions are computed
     # from; claims are skipped when the pair is not part of the run.

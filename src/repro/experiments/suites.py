@@ -16,8 +16,8 @@ import os
 from typing import Dict, List
 
 from repro.core.latency import AES_600B_WORK_US
-from repro.experiments.scenario import (ArrivalSpec, FunctionProfile,
-                                        Scenario, zipf_mix)
+from repro.experiments.scenario import (ArrivalSpec, AutoscalerSpec,
+                                        FunctionProfile, Scenario, zipf_mix)
 
 _DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "experiments", "dryrun")
@@ -92,8 +92,11 @@ def build_scenarios() -> Dict[str, Scenario]:
             arrival=ArrivalSpec("poisson"),
             rates={"containerd": (600.0, 1000.0, 1400.0),
                    "junctiond": (1500.0, 4000.0, 8000.0),
+                   "quark": (400.0, 700.0, 1000.0),
+                   "wasm": (700.0, 1200.0, 1700.0),
                    "*": (600.0, 1000.0, 1400.0)},
             smoke_rates={"containerd": (1000.0,), "junctiond": (4000.0,),
+                         "quark": (700.0,), "wasm": (1200.0,),
                          "*": (1000.0,)},
             duration_s=1.0, n_cores=36, seeds=(0,), slo_p99_ms=10.0,
             tags=("multitenant",)),
@@ -106,8 +109,11 @@ def build_scenarios() -> Dict[str, Scenario]:
                                 mean_quiet_s=0.20, mean_burst_s=0.05),
             rates={"containerd": (400.0, 800.0, 1200.0),
                    "junctiond": (1500.0, 4000.0, 8000.0),
+                   "quark": (300.0, 600.0, 900.0),
+                   "wasm": (500.0, 800.0, 1100.0),
                    "*": (400.0, 800.0, 1200.0)},
             smoke_rates={"containerd": (800.0,), "junctiond": (4000.0,),
+                         "quark": (600.0,), "wasm": (800.0,),
                          "*": (800.0,)},
             duration_s=1.2, seeds=(1,), slo_p99_ms=10.0,
             tags=("bursty",)),
@@ -119,8 +125,11 @@ def build_scenarios() -> Dict[str, Scenario]:
             arrival=ArrivalSpec("diurnal", amplitude=0.8, period_s=0.5),
             rates={"containerd": (600.0, 1000.0),
                    "junctiond": (2000.0, 6000.0),
+                   "quark": (450.0, 600.0),
+                   "wasm": (700.0, 1200.0),
                    "*": (600.0, 1000.0)},
             smoke_rates={"containerd": (1000.0,), "junctiond": (6000.0,),
+                         "quark": (600.0,), "wasm": (1200.0,),
                          "*": (1000.0,)},
             duration_s=1.0, seeds=(2,), slo_p99_ms=10.0,
             tags=("diurnal",)),
@@ -134,8 +143,11 @@ def build_scenarios() -> Dict[str, Scenario]:
             arrival=ArrivalSpec("poisson"),
             rates={"containerd": (400.0, 800.0, 1200.0),
                    "junctiond": (1500.0, 4000.0, 8000.0),
+                   "quark": (300.0, 600.0, 900.0),
+                   "wasm": (500.0, 1000.0, 1500.0),
                    "*": (400.0, 800.0, 1200.0)},
             smoke_rates={"containerd": (800.0,), "junctiond": (4000.0,),
+                         "quark": (600.0,), "wasm": (1000.0,),
                          "*": (800.0,)},
             duration_s=1.0, seeds=(4,), slo_p99_ms=25.0,
             tags=("heavytail",)),
@@ -148,6 +160,63 @@ def build_scenarios() -> Dict[str, Scenario]:
             rates={"*": (0.0,)},      # the trace fixes the rate
             duration_s=1.2, seeds=(0,), slo_p99_ms=25.0,
             tags=("trace",)),
+        Scenario(
+            name="autoscale-burst",
+            description="MMPP-2 bursts against an autoscaled function: "
+                        "gates on scale-up reaction time (pressure onset "
+                        "-> capacity ready; FaaSNet's production metric)",
+            mode="open", functions=(FunctionProfile("aes", max_cores=8),),
+            arrival=ArrivalSpec("bursty", quiet_frac=0.25,
+                                mean_quiet_s=0.20, mean_burst_s=0.05),
+            autoscaler=AutoscalerSpec(policy="lead-time",
+                                      target_inflight_per_replica=2.0,
+                                      max_replicas=16),
+            rates={"containerd": (400.0, 800.0, 1200.0),
+                   "junctiond": (1500.0, 4000.0, 8000.0),
+                   "quark": (300.0, 600.0, 900.0),
+                   "wasm": (500.0, 800.0, 1100.0),
+                   "*": (400.0, 800.0, 1200.0)},
+            smoke_rates={"containerd": (800.0,), "junctiond": (4000.0,),
+                         "quark": (600.0,), "wasm": (800.0,),
+                         "*": (800.0,)},
+            duration_s=1.2, seeds=(1,), slo_p99_ms=15.0,
+            claims_kind="autoscale",
+            tags=("autoscale", "bursty", "provisioning")),
+        Scenario(
+            name="autoscale-diurnal",
+            description="Diurnal rate drift with the lead-time autoscaler "
+                        "tracking it: replica timeline follows the "
+                        "sinusoid, scale events off the critical path",
+            mode="open", functions=(FunctionProfile("aes", max_cores=8),),
+            arrival=ArrivalSpec("diurnal", amplitude=0.8, period_s=0.5),
+            autoscaler=AutoscalerSpec(policy="lead-time",
+                                      target_inflight_per_replica=2.0,
+                                      max_replicas=16),
+            rates={"containerd": (600.0, 1000.0),
+                   "junctiond": (2000.0, 6000.0),
+                   "quark": (450.0, 600.0),
+                   "wasm": (700.0, 1200.0),
+                   "*": (600.0, 1000.0)},
+            smoke_rates={"containerd": (1000.0,), "junctiond": (6000.0,),
+                         "quark": (600.0,), "wasm": (1200.0,),
+                         "*": (1000.0,)},
+            duration_s=1.0, seeds=(2,), slo_p99_ms=15.0,
+            tags=("autoscale", "diurnal")),
+        Scenario(
+            name="mixed-cold-warm",
+            description="Steady warm traffic plus a provisioning storm on "
+                        "the same worker: warm-path P99 interference from "
+                        "the cold path, autoscaler in the loop",
+            mode="mixed", functions=(FunctionProfile("aes", max_cores=8),),
+            arrival=ArrivalSpec("poisson"),
+            autoscaler=AutoscalerSpec(policy="lead-time",
+                                      target_inflight_per_replica=2.0,
+                                      max_replicas=16),
+            rates={"containerd": (600.0,), "junctiond": (2000.0,),
+                   "quark": (450.0,), "wasm": (700.0,), "*": (600.0,)},
+            duration_s=3.0, warmup_frac=0.1, storm_functions=16,
+            seeds=(0,), slo_p99_ms=15.0, claims_kind="interference",
+            tags=("mixed", "coldstart", "autoscale", "provisioning")),
         Scenario(
             name="model-endpoint",
             description="Model decode steps as junctiond functions: how "
@@ -167,13 +236,17 @@ SUITES: Dict[str, List[str]] = {
     # full matrix at default durations — the acceptance gate
     "scenarios": ["paper-fig5", "paper-fig6", "cold-start-storm",
                   "multi-tenant-mix", "bursty-burst", "diurnal-drift",
-                  "heavy-tail-mix", "trace-replay", "model-endpoint"],
+                  "heavy-tail-mix", "trace-replay", "autoscale-burst",
+                  "autoscale-diurnal", "mixed-cold-warm", "model-endpoint"],
     # short CI gate: same scenarios, smoke rates + scaled durations
     "smoke": ["paper-fig5", "paper-fig6", "cold-start-storm",
               "multi-tenant-mix", "bursty-burst", "diurnal-drift",
-              "heavy-tail-mix", "model-endpoint"],
+              "heavy-tail-mix", "autoscale-burst", "autoscale-diurnal",
+              "mixed-cold-warm", "model-endpoint"],
     # just the paper's headline figures
     "paper": ["paper-fig5", "paper-fig6", "cold-start-storm"],
+    # the control-plane trio (autoscaler-in-the-loop)
+    "autoscale": ["autoscale-burst", "autoscale-diurnal", "mixed-cold-warm"],
 }
 
 SMOKE_DURATION_SCALE = 0.33

@@ -1,0 +1,358 @@
+"""Backend-aware control plane: ScalePolicy implementations (hysteresis,
+clamping, lead-time derivation from the ColdStartModel), the Autoscaler's
+backend-sourced replica truth and structured scale-event telemetry, the
+workload-driver hooks, the per-backend reaction-time ordering (the
+control-plane analogue of the fig5/coldstart orderings), schema-v3
+artifacts, and the runner's autoscaled scenarios."""
+import dataclasses
+
+import pytest
+
+from repro.core import (Autoscaler, FaasdRuntime, FunctionSpec,
+                        LeadTimePolicy, QueueDepthPolicy, ScalePolicy,
+                        Simulator, available_backends, get_backend_class,
+                        run_mixed_open_loop, run_open_loop, run_sequential,
+                        PoissonArrivals)
+from repro.experiments import (AutoscalerSpec, ExperimentRunner,
+                               build_artifact, get_scenario, get_suite,
+                               metric_row, validate_artifact)
+from repro.experiments.artifacts import SCHEMA_VERSION
+
+ALL_BACKENDS = available_backends()
+FOUR = ("containerd", "junctiond", "quark", "wasm")
+
+
+def _runtime(backend, seed=0, **kw):
+    sim = Simulator(seed=seed)
+    return FaasdRuntime(sim, backend=backend, **kw)
+
+
+def _autoscaled(backend, policy, fn="f", seed=0, **fn_kw):
+    rt = _runtime(backend, seed=seed)
+    rt.deploy_blocking(FunctionSpec(name=fn, **fn_kw))
+    asc = Autoscaler(rt.sim, rt, policy)
+    asc.run()
+    return rt, asc
+
+
+# ---------------------------------------------------------------------------
+# Policies as pure functions.
+
+
+def test_queue_depth_policy_hysteresis_band_holds_steady():
+    pol = QueueDepthPolicy(target_inflight_per_replica=4.0,
+                           scale_down_hysteresis=0.5)
+    cs = get_backend_class("junctiond").coldstart
+    # load inside [target*hyst*cur, target*cur] = [8, 16] for cur=4: no move
+    for load in (8, 12, 16):
+        assert pol.desired(inflight=load, replicas=4, arrival_rate_rps=0.0,
+                           coldstart=cs) == 4
+    assert pol.desired(inflight=17, replicas=4, arrival_rate_rps=0.0,
+                       coldstart=cs) == 8
+    assert pol.desired(inflight=7, replicas=4, arrival_rate_rps=0.0,
+                       coldstart=cs) == 2
+
+
+def test_policies_clamp_to_min_max():
+    cs = get_backend_class("junctiond").coldstart
+    for pol in (QueueDepthPolicy(min_replicas=2, max_replicas=4),
+                LeadTimePolicy(min_replicas=2, max_replicas=4)):
+        assert pol.desired(inflight=10_000, replicas=4,
+                           arrival_rate_rps=50_000.0, coldstart=cs) == 4
+        assert pol.desired(inflight=0, replicas=2, arrival_rate_rps=0.0,
+                           coldstart=cs) == 2
+        assert isinstance(pol, ScalePolicy)
+
+
+def test_lead_time_period_and_headroom_derive_from_coldstart():
+    pol = LeadTimePolicy(target_inflight_per_replica=2.0)
+    periods = {b: pol.control_period(get_backend_class(b).coldstart)
+               for b in FOUR}
+    # sub-ms scale-up -> floor; 100s-of-ms scale-up -> ceiling
+    assert periods["junctiond"] == periods["wasm"] == pol.period_floor_s
+    assert periods["containerd"] == periods["quark"] == pol.period_ceil_s
+    # headroom covers the arrivals landing during the scale-up lead time:
+    # at 1000 rps a 270 ms containerd scale-up eats 270 arrivals (135
+    # replicas at target 2 -> clamped), junctiond's 0.2 ms eats ~0
+    slow = get_backend_class("containerd").coldstart
+    fast = get_backend_class("junctiond").coldstart
+    want_slow = pol.desired(inflight=5, replicas=1, arrival_rate_rps=1000.0,
+                            coldstart=slow)
+    want_fast = pol.desired(inflight=5, replicas=1, arrival_rate_rps=1000.0,
+                            coldstart=fast)
+    assert want_slow == pol.max_replicas
+    assert want_fast == 4               # ceil(5/2) + ceil(0.2/2) = 3 + 1
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler: backend truth, state drift, off-critical-path scaling.
+
+
+def test_replica_truth_comes_from_backend_lookup():
+    rt, asc = _autoscaled("junctiond", QueueDepthPolicy(period_s=0.02))
+    assert asc.replicas("f") == rt.backend.lookup("f").replicas == 1
+    asc.inflight["f"] = 100
+    rt.sim.run(until=0.5)
+    assert asc.replicas("f") == rt.backend.lookup("f").replicas > 1
+    assert asc.replicas("ghost") is None
+
+
+def test_external_remove_produces_no_ghost_scale_events():
+    """Regression for the shadow-dict drift: scaling pressure on a
+    function removed behind the controller's back must not emit scale
+    events, and the stale load signal is dropped."""
+    rt, asc = _autoscaled("junctiond", QueueDepthPolicy(period_s=0.02))
+    for _ in range(50):
+        asc.on_arrival("f")
+    rt.backend.remove("f")              # external remove, controller unaware
+    rt.sim.run(until=0.2)
+    assert asc.scale_events == []
+    assert "f" not in asc.inflight      # stale state dropped at the tick
+    assert "f" not in asc._pressure_t0
+    # redeploy re-enters the control loop with the backend's real count
+    rt.deploy_blocking(FunctionSpec(name="f"))
+    for _ in range(50):
+        asc.on_arrival("f")
+    rt.sim.run(until=0.4)
+    assert any(e.up for e in asc.scale_events)
+    assert asc.replicas("f") == rt.backend.lookup("f").replicas
+
+
+def test_scaling_stays_off_the_critical_path():
+    """Warm invocations must be byte-identical with and without the
+    controller running: decisions spawn their own processes and consume
+    neither sim time nor RNG draws on the invoke path."""
+    def latencies(with_autoscaler):
+        rt = _runtime("containerd", seed=3)
+        rt.deploy_blocking(FunctionSpec(name="f"))
+        if with_autoscaler:
+            asc = Autoscaler(rt.sim, rt, QueueDepthPolicy(
+                period_s=0.01, target_inflight_per_replica=0.5))
+            asc.run()
+            asc.inflight["f"] = 100      # constant pressure -> scale ops fly
+        run_sequential(rt, "f", n=40)
+        return rt.latencies_ms()
+
+    assert latencies(False) == latencies(True)
+
+
+def test_scale_events_carry_request_decision_ready_timeline():
+    rt, asc = _autoscaled("containerd", LeadTimePolicy(
+        target_inflight_per_replica=2.0))
+    sim = rt.sim
+    t0 = sim.now                        # deploy already consumed sim time
+    for _ in range(10):                 # pressure onset now
+        asc.on_arrival("f")
+    sim.run(until=t0 + 2.0)
+    ups = [e for e in asc.scale_events if e.up]
+    assert ups and ups[0].ready
+    e = ups[0]
+    assert e.t_request <= e.t_decision < e.t_ready
+    # decision waited for the 0.25 s control period; the backend then took
+    # its 270 ms scale-up on top
+    assert e.t_decision == pytest.approx(t0 + 0.25)
+    assert e.t_request == pytest.approx(t0)
+    assert e.t_ready - e.t_decision == pytest.approx(
+        rt.backend.coldstart.scale_seconds)
+    assert e.cold_starts == e.to_replicas - e.from_replicas > 0
+    tel = asc.telemetry()
+    assert tel["policy"] == "lead-time"
+    assert tel["n_scale_events"] == len(asc.scale_events)
+    assert tel["cold_starts"] >= e.cold_starts
+    assert tel["timeline"][0][2] == e.to_replicas
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_scale_up_reaction_time_tracks_coldstart_class(name):
+    """Conformance-style: every backend's measured reaction time equals
+    its modeled scale-up cost (pressure observed at the tick, capacity
+    ready one scale op later)."""
+    rt, asc = _autoscaled(name, LeadTimePolicy(
+        target_inflight_per_replica=2.0), max_cores=8)
+    asc.inflight["f"] = 3               # need one extra replica, no headroom
+    rt.sim.run(until=2.0)
+    ups = [e for e in asc.scale_events if e.up and e.ready]
+    assert len(ups) == 1
+    assert ups[0].reaction_s == pytest.approx(
+        rt.backend.coldstart.scale_seconds * ups[0].cold_starts)
+
+
+def test_reaction_time_ordering_across_backends():
+    """The control-plane ordering the cold-start asymmetry buys:
+    junctiond reacts fastest, wasm close behind, containerd two orders
+    slower, quark slowest (guest-kernel boot on top)."""
+    def reaction_s(name):
+        rt, asc = _autoscaled(name, LeadTimePolicy(
+            target_inflight_per_replica=2.0), max_cores=8)
+        asc.inflight["f"] = 3
+        rt.sim.run(until=2.0)
+        ups = [e for e in asc.scale_events if e.up and e.ready]
+        return ups[0].reaction_s
+
+    r = {b: reaction_s(b) for b in FOUR}
+    assert r["junctiond"] < r["wasm"] < r["containerd"] <= r["quark"]
+    assert r["containerd"] / r["junctiond"] > 100
+
+
+def test_reaction_time_not_inflated_by_stale_pressure():
+    """Regression: pressure that subsides without a scale-up (e.g. the
+    controller clamped at max_replicas) must not leave its onset behind —
+    a scale-up during a much later burst would otherwise inherit it and
+    report a wildly inflated reaction time."""
+    rt, asc = _autoscaled("junctiond", LeadTimePolicy(
+        target_inflight_per_replica=2.0, max_replicas=2), max_cores=8)
+    sim = rt.sim
+    t0 = sim.now
+    asc.inflight["f"] = 100             # burst 1: pins at max_replicas
+    sim.run(until=t0 + 0.2)
+    asc.inflight["f"] = 0               # burst drains; quiet for a second
+    sim.run(until=t0 + 1.2)
+    assert "f" not in asc._pressure_t0  # onset cleared while quiet
+    n_before = len(asc.scale_events)
+    asc.inflight["f"] = 100             # burst 2, over a second later
+    sim.run(until=t0 + 1.5)
+    ups = [e for e in asc.scale_events[n_before:] if e.up and e.ready]
+    assert ups
+    # reaction reflects burst 2 only (a control period + the scale op),
+    # not the 1.2 s since burst 1
+    assert ups[0].reaction_s < 0.1
+
+
+def test_cold_path_arrivals_counted_while_scaleup_in_flight():
+    rt, asc = _autoscaled("containerd", LeadTimePolicy(
+        target_inflight_per_replica=2.0))
+    sim = rt.sim
+
+    def load():
+        for _ in range(40):             # arrivals spanning the 270ms scale-up
+            asc.on_arrival("f")
+            yield sim.timeout(0.02)
+
+    sim.process(load())
+    sim.run(until=2.0)
+    assert any(e.up for e in asc.scale_events)
+    assert asc.cold_path_arrivals > 0
+    assert asc.cold_path_arrivals == asc.telemetry()["cold_path_arrivals"]
+
+
+# ---------------------------------------------------------------------------
+# Workload-driver hooks.
+
+
+def test_open_loop_drivers_feed_hooks_balanced():
+    events = []
+    rt = _runtime("junctiond", seed=5)
+    rt.deploy_blocking(FunctionSpec(name="f"))
+    run_open_loop(rt, "f", rate_rps=500.0, duration_s=0.3,
+                  on_arrival=lambda fn: events.append(("arr", fn)),
+                  on_done=lambda fn: events.append(("done", fn)))
+    arrs = [e for e in events if e[0] == "arr"]
+    dones = [e for e in events if e[0] == "done"]
+    assert len(arrs) > 50 and len(arrs) == len(dones)
+    assert {fn for _, fn in events} == {"f"}
+
+
+def test_mixed_open_loop_hooks_see_the_picked_function():
+    rt = _runtime("junctiond", seed=6)
+    rt.deploy_blocking(FunctionSpec(name="a"))
+    rt.deploy_blocking(FunctionSpec(name="b"))
+    counts = {}
+    res = run_mixed_open_loop(
+        rt, ["a", "b"], [0.7, 0.3], PoissonArrivals(800.0), duration_s=0.3,
+        on_arrival=lambda fn: counts.__setitem__(fn, counts.get(fn, 0) + 1))
+    assert set(counts) == {"a", "b"}
+    assert counts["a"] > counts["b"]
+    assert sum(counts.values()) >= res["n"]     # hooks fire pre-warmup too
+
+
+# ---------------------------------------------------------------------------
+# AutoscalerSpec + schema v3.
+
+
+def test_autoscaler_spec_builds_policies():
+    spec = AutoscalerSpec(policy="queue-depth", period_s=0.1,
+                          max_replicas=8)
+    pol = spec.build()
+    assert isinstance(pol, QueueDepthPolicy)
+    assert pol.period_s == 0.1 and pol.max_replicas == 8
+    lead = AutoscalerSpec(policy="lead-time", lead_mult=3.0).build()
+    assert isinstance(lead, LeadTimePolicy) and lead.lead_mult == 3.0
+    with pytest.raises(ValueError, match="unknown autoscaler policy"):
+        AutoscalerSpec(policy="bogus").build()
+
+
+def test_schema_v3_validates_autoscaler_blocks():
+    assert SCHEMA_VERSION == 3
+    good_block = {"policy": "lead-time", "n_scale_events": 3,
+                  "cold_starts": 2, "cold_path_arrivals": 5,
+                  "reaction_p50_ms": 1.5}
+    doc = build_artifact("unit", [{
+        "name": "s", "mode": "open", "description": "d",
+        "backend_set": ["junctiond"],
+        "backends": {"junctiond": {"autoscaler": good_block}}}],
+        [metric_row("m", 1.0, "d")], [])
+    validate_artifact(doc)
+    bad = build_artifact("unit", [{
+        "name": "s", "mode": "open", "description": "d",
+        "backend_set": ["junctiond"],
+        "backends": {"junctiond": {"autoscaler": {"policy": "lead-time"}}}}],
+        [], [])
+    with pytest.raises(ValueError, match="autoscaler missing"):
+        validate_artifact(bad)
+    # v2 documents never required the block's keys
+    bad["schema_version"] = 2
+    validate_artifact(bad)
+
+
+# ---------------------------------------------------------------------------
+# Runner integration: the autoscaled scenarios.
+
+
+def test_autoscale_burst_claims_favor_junctiond():
+    sc = get_scenario("autoscale-burst")
+    doc = ExperimentRunner(duration_scale=0.33, smoke=True).run_suite(
+        [sc], suite="unit")
+    assert not doc["failures"], doc["failures"]
+    validate_artifact(doc)
+    entry = doc["scenarios"][0]
+    assert entry["autoscaler_spec"]["policy"] == "lead-time"
+    for backend, res in entry["backends"].items():
+        block = res["autoscaler"]
+        assert block["n_scale_events"] > 0, f"{backend} never scaled"
+        assert block["reactions_ms"]
+        assert block["timeline"]
+        assert any(r.get("scale_events") for r in res["curve"])
+    claims = entry["claims"]
+    assert claims["scaleup_reaction_ratio"]["measured"] > 1.0
+    names = {m["name"]: m["value"] for m in doc["metrics"]}
+    assert names["autoscale_reaction_ratio"] > 1.0
+    assert "scn_autoscale-burst_junctiond_scaleup_reaction" in names
+
+
+def test_mixed_cold_warm_measures_interference_with_telemetry():
+    sc = get_scenario("mixed-cold-warm")
+    doc = ExperimentRunner(duration_scale=0.33, smoke=True).run_suite(
+        [sc], suite="unit")
+    assert not doc["failures"], doc["failures"]
+    validate_artifact(doc)
+    entry = doc["scenarios"][0]
+    for backend, res in entry["backends"].items():
+        assert res["mode"] == "mixed"
+        assert res["warm_p99_before_ms"] > 0
+        assert res["warm_p99_during_ms"] > 0
+        assert res["storm_deploy_median_ms"] > 0
+        assert res["autoscaler"]["n_scale_events"] > 0
+    claims = entry["claims"]
+    assert claims["baseline_warm_p99_inflation"]["measured"] > 0
+    # the storm itself resolves orders of magnitude faster on junctiond
+    assert (claims["baseline_storm_total_ms"]["measured"]
+            > 10 * claims["treatment_storm_total_ms"]["measured"])
+
+
+def test_autoscale_suite_and_smoke_cover_the_new_scenarios():
+    smoke = {s.name for s in get_suite("smoke")}
+    assert {"autoscale-burst", "autoscale-diurnal",
+            "mixed-cold-warm"} <= smoke
+    trio = get_suite("autoscale")
+    assert all(s.autoscaler is not None for s in trio)
+    assert {s.mode for s in trio} == {"open", "mixed"}

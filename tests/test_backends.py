@@ -311,27 +311,53 @@ def test_open_mode_fails_loudly_without_a_rate_grid():
                for f in doc["failures"])
 
 
-def test_validate_artifact_accepts_v1_schema():
-    """Artifacts written by older commits (schema_version 1, no
-    backend_set) must keep validating — they are compare.py baselines."""
+def test_validate_artifact_accepts_v1_and_v2_schemas():
+    """Artifacts written by older commits (schema_version 1/2) must keep
+    validating — they are compare.py baselines."""
     v1 = build_artifact("old", [{"name": "s", "mode": "closed",
                                  "description": "d", "backends": {}}],
                         [metric_row("m", 1.0, "d")], [])
     v1["schema_version"] = 1
     validate_artifact(v1)                      # no backend_set required
-    v3 = dict(v1, schema_version=3)
+    v2 = dict(v1, schema_version=2)
+    v2["scenarios"] = [dict(v1["scenarios"][0], backend_set=["containerd"])]
+    validate_artifact(v2)
+    v4 = dict(v1, schema_version=4)
     with pytest.raises(ValueError, match="schema_version"):
-        validate_artifact(v3)
+        validate_artifact(v4)
 
 
 def test_rates_fall_back_to_wildcard_grid():
     sc = get_scenario("multi-tenant-mix")
     assert sc.rates_for("junctiond") == (1500.0, 4000.0, 8000.0)
-    assert sc.rates_for("quark") == sc.rates["*"]
-    assert sc.rates_for("wasm", smoke=True) == sc.smoke_rates["*"]
+    # unregistered-in-grid backends use the '*' fallback
+    assert sc.rates_for("some-new-backend") == sc.rates["*"]
+    assert sc.rates_for("some-new-backend", smoke=True) == sc.smoke_rates["*"]
     fig6 = get_scenario("paper-fig6")
     for b in FOUR:                  # fig6 grids are explicit per backend
         assert fig6.rates_for(b)
+
+
+@pytest.mark.parametrize("scenario", ["multi-tenant-mix", "bursty-burst",
+                                      "diurnal-drift", "heavy-tail-mix",
+                                      "autoscale-burst", "autoscale-diurnal",
+                                      "mixed-cold-warm"])
+def test_quark_and_wasm_have_knee_sized_grids(scenario):
+    """quark/wasm get explicit per-scenario rate grids sized to their own
+    knees instead of riding the '*' fallback (which reuses the containerd
+    grid and often sits past quark's knee, wasting sweep samples)."""
+    sc = get_scenario(scenario)
+    for b in ("quark", "wasm"):
+        assert b in sc.rates, f"{scenario} missing explicit {b} grid"
+        assert sc.rates_for(b) != sc.rates["*"]
+        if sc.smoke_rates:
+            assert b in sc.smoke_rates
+    # quark's interception tax puts its knee below containerd's on every
+    # workload; wasm's grid tracks its own measured knee, not containerd's
+    quark = sc.rates_for("quark")
+    containerd = sc.rates_for("containerd")
+    assert max(quark) < max(containerd)
+    assert min(quark) <= min(containerd)
 
 
 # ---------------------------------------------------------------------------
