@@ -20,7 +20,8 @@ Examples::
 
     python -m benchmarks.run --suite smoke --json BENCH_ci.json
     python -m benchmarks.run --suite smoke \
-        --backends containerd,junctiond,quark,wasm --json BENCH_ci.json
+        --backends containerd,junctiond,quark,wasm,firecracker,gvisor \
+        --json BENCH_ci.json
     python -m benchmarks.run --suite scenarios --json BENCH_scenarios.json \
         --workers 4
     python -m benchmarks.run --list

@@ -2,16 +2,19 @@
 # backend for faasd — modelled as a composable system: a deterministic
 # discrete-event runtime hosting the faasd components (gateway, provider),
 # a registry of pluggable execution backends (containerd, junctiond, and
-# the modeled quark/wasm backends from related work), the network
-# datapaths, and the centralized polling scheduler.
+# the modeled quark/wasm/firecracker/gvisor backends from related work),
+# the network datapaths, and the centralized polling scheduler.
 from repro.core.autoscaler import (Autoscaler, LeadTimePolicy,
                                    QueueDepthPolicy, ScaleEvent, ScalePolicy)
 from repro.core.backends import (ColdStartModel, ExecutionBackend,
+                                 SnapshotColdStartModel,
                                  UnknownFunctionError, available_backends,
                                  get_backend_class, register_backend,
                                  resolve_backend)
 from repro.core.containerd import Containerd
 from repro.core.faas import FaasdRuntime, FunctionSpec, InvocationRecord
+from repro.core.firecracker import Firecracker, SnapshotCache
+from repro.core.gvisor import GVisor
 from repro.core.junction import JunctionInstance, UProc
 from repro.core.junctiond import Junctiond
 from repro.core.quark import Quark
@@ -30,10 +33,12 @@ from repro.core.workload import (ArrivalProcess, BurstyArrivals,
 __all__ = [
     "Autoscaler", "ScalePolicy", "QueueDepthPolicy", "LeadTimePolicy",
     "ScaleEvent",
-    "ColdStartModel", "ExecutionBackend", "UnknownFunctionError",
+    "ColdStartModel", "SnapshotColdStartModel", "ExecutionBackend",
+    "UnknownFunctionError",
     "available_backends", "get_backend_class", "register_backend",
     "resolve_backend",
     "Containerd", "FaasdRuntime", "FunctionSpec", "InvocationRecord",
+    "Firecracker", "SnapshotCache", "GVisor",
     "JunctionInstance", "UProc", "Junctiond", "Quark", "WasmSandbox",
     "NetStack", "CorePool",
     "JunctionScheduler", "PollingModel", "Event", "Process", "Queue",

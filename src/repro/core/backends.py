@@ -23,10 +23,12 @@ backend:
 Implementations register under a unique name with ``@register_backend``;
 :func:`resolve_backend` turns a name (via the registry) or a ready
 instance into the bundle ``FaasdRuntime`` composes with.  Adding a
-backend therefore never touches ``faas.py`` — see the four built-ins:
+backend therefore never touches ``faas.py`` — see the six built-ins:
 ``containerd``, ``junctiond`` (the paper's pair), ``quark`` (secure
-container runtime, arXiv:2309.12624) and ``wasm`` (lightweight sandbox,
-arXiv:2010.07115).
+container runtime, arXiv:2309.12624), ``wasm`` (lightweight sandbox,
+arXiv:2010.07115), ``firecracker`` (microVM with snapshot-restore cold
+starts) and ``gvisor`` (Sentry-intercepted sandbox, KVM or ptrace
+platform).
 """
 from __future__ import annotations
 
@@ -84,6 +86,42 @@ class ColdStartModel:
         return self.query_ms * 1e-3
 
 
+@dataclasses.dataclass(frozen=True)
+class SnapshotColdStartModel(ColdStartModel):
+    """Two-mode cold-start class for snapshotting backends (Firecracker
+    microVMs): a function's *first* cold start pays the full boot
+    (``deploy_ms``) and warms a per-function snapshot; every later cold
+    start restores from that snapshot in ``restore_ms``.
+
+    ``scale_seconds`` — what
+    :class:`~repro.core.autoscaler.LeadTimePolicy` derives its control
+    period and headroom from — and ``scale_factor`` are both **derived
+    from the restore path** (scale-ups always run against a snapshot the
+    deploy already warmed); callers pass ``restore_ms`` and cannot
+    desynchronise the marginal replica cost from it.
+    """
+    restore_ms: float = 0.0
+    scale_factor: float = dataclasses.field(default=0.0, kw_only=True)
+
+    def __post_init__(self):
+        if not 0 < self.restore_ms < self.deploy_ms:
+            raise ValueError(
+                f"restore_ms must be in (0, deploy_ms={self.deploy_ms}), "
+                f"got {self.restore_ms} — a snapshot restore is the cheap "
+                "mode of a two-mode cold start")
+        object.__setattr__(self, "scale_factor",
+                           self.restore_ms / self.deploy_ms)
+
+    @property
+    def restore_seconds(self) -> float:
+        return self.restore_ms * 1e-3
+
+    @property
+    def scale_seconds(self) -> float:
+        # one extra replica = one snapshot restore, never a full boot
+        return self.restore_seconds
+
+
 class ExecutionBackend(abc.ABC):
     """One execution backend: cost tables + host resources + lifecycle.
 
@@ -123,8 +161,13 @@ class ExecutionBackend(abc.ABC):
     def deploy(self, fn_name: str, *, scale: int = 1, max_cores: int = 2,
                isolate_replicas: bool = False) -> Generator:
         """Process: create the function's sandbox(es); yields until ready.
-        Re-deploying an existing name first releases the old resources
-        (exactly as :meth:`remove` would) — no leaks on config updates."""
+        Re-deploying an existing name first releases the old *runtime*
+        resources (sandboxes, scheduler registrations — as :meth:`remove`
+        would) so config updates never leak.  One deliberate exception:
+        a snapshotting backend keeps the function's image-keyed snapshot
+        across redeploys so they restore fast; only :meth:`remove` (full
+        teardown) evicts it.  See the snapshot-cache lifecycle contract
+        in ROADMAP.md and the conformance tests."""
 
     @abc.abstractmethod
     def scale(self, fn_name: str, replicas: int) -> Generator:
@@ -170,6 +213,8 @@ _BUILTIN_MODULES = (
     "repro.core.junctiond",
     "repro.core.quark",
     "repro.core.wasm",
+    "repro.core.firecracker",
+    "repro.core.gvisor",
 )
 
 

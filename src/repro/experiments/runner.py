@@ -57,6 +57,17 @@ def _mean(xs: Sequence[float]) -> float:
     return float(np.mean(xs)) if len(xs) else float("nan")
 
 
+def _storm_spec(sc: Scenario, i: int) -> FunctionSpec:
+    """Spec for the i-th function of a provisioning storm; every storm
+    wave (first deploys, redeploys, mixed-mode storms) must build the
+    identical spec or the waves measure different functions."""
+    prof = sc.functions[i % len(sc.functions)]
+    return FunctionSpec(
+        name=f"storm-{prof.name}-{i}", work_us=prof.work_us,
+        payload_bytes=prof.payload_bytes,
+        response_bytes=prof.response_bytes, max_cores=prof.max_cores)
+
+
 def _make_autoscaler(sc: Scenario, rt: FaasdRuntime) -> Optional[Autoscaler]:
     if sc.autoscaler is None:
         return None
@@ -202,6 +213,7 @@ def _exec_storm(sc: Scenario, backend: str, duration_scale: float,
     deploy_ms: List[float] = []
     invoke_ms: List[float] = []
     total_ms: List[float] = []
+    redeploy_ms: List[float] = []
     for seed in _seeds(sc, smoke):
         sim = Simulator(seed=seed)
         rt = FaasdRuntime(sim, backend=backend, n_cores=sc.n_cores)
@@ -209,11 +221,7 @@ def _exec_storm(sc: Scenario, backend: str, duration_scale: float,
         remaining = [k]
 
         def one(i):
-            prof = sc.functions[i % len(sc.functions)]
-            spec = FunctionSpec(
-                name=f"storm-{prof.name}-{i}", work_us=prof.work_us,
-                payload_bytes=prof.payload_bytes,
-                response_bytes=prof.response_bytes, max_cores=prof.max_cores)
+            spec = _storm_spec(sc, i)
             yield from rt.deploy(spec)
             deploy_ms.append((sim.now - t0) * 1e3)
             rec = yield from rt.invoke(spec.name)
@@ -227,20 +235,45 @@ def _exec_storm(sc: Scenario, backend: str, duration_scale: float,
             sim.process(one(i))
         sim.run()
         assert remaining[0] == 0, "storm did not drain"
-    # a contention-free single deploy for the paper's instance-init claim
+        # second wave: redeploy every storm function (config-update shape).
+        # Plain backends pay the same cold start again; a snapshotting
+        # backend (firecracker) restores from the snapshots the first wave
+        # warmed — this is the storm's snapshot-restore-vs-full-boot signal
+        remaining = [k]
+
+        def again(i):
+            t1 = sim.now
+            yield from rt.deploy(_storm_spec(sc, i))
+            redeploy_ms.append((sim.now - t1) * 1e3)
+            remaining[0] -= 1
+            if remaining[0] == 0:
+                sim.stop()
+
+        for i in range(k):
+            sim.process(again(i))
+        sim.run()
+        assert remaining[0] == 0, "redeploy wave did not drain"
+    # contention-free singles: a first deploy for the paper's
+    # instance-init claim, a redeploy for the snapshot-restore claim
     sim = Simulator(seed=0)
     rt = FaasdRuntime(sim, backend=backend, n_cores=sc.n_cores)
     t0 = sim.now
     rt.deploy_blocking(FunctionSpec(name="solo"))
     single_deploy_ms = (sim.now - t0) * 1e3
+    t0 = sim.now
+    rt.deploy_blocking(FunctionSpec(name="solo"))
+    single_redeploy_ms = (sim.now - t0) * 1e3
     d, t = LatencySummary.of(deploy_ms), LatencySummary.of(total_ms)
     return {
         "mode": "storm",
         "functions": k,
         "n": len(total_ms),
         "single_deploy_ms": single_deploy_ms,
+        "single_redeploy_ms": single_redeploy_ms,
+        "redeploy_speedup": single_deploy_ms / max(single_redeploy_ms, 1e-9),
         "deploy_median_ms": d.median_ms,
         "deploy_p99_ms": d.p99_ms,
+        "redeploy_median_ms": LatencySummary.of(redeploy_ms).median_ms,
         "first_invoke_median_ms": LatencySummary.of(invoke_ms).median_ms,
         "median_ms": t.median_ms,       # deploy + first invoke, end to end
         "p99_ms": t.p99_ms,
@@ -281,11 +314,7 @@ def _exec_mixed(sc: Scenario, backend: str, duration_scale: float,
         def one_storm(i, t0=t0, sim=sim, rt=rt, done=storm_done_t):
             # staggered FaaSNet-style storm: deploy + a short invoke train
             yield sim.timeout(storm_t + i * 0.002 - (sim.now - t0))
-            prof = sc.functions[i % len(sc.functions)]
-            spec = FunctionSpec(
-                name=f"storm-{prof.name}-{i}", work_us=prof.work_us,
-                payload_bytes=prof.payload_bytes,
-                response_bytes=prof.response_bytes, max_cores=prof.max_cores)
+            spec = _storm_spec(sc, i)
             t_start = sim.now
             yield from rt.deploy(spec)
             storm_deploy_ms.append((sim.now - t_start) * 1e3)
@@ -624,6 +653,11 @@ class ExperimentRunner:
                         f"scn_{sc.name}_{backend}_scaleup_reaction",
                         res["autoscaler"]["reaction_p50_ms"],
                         "ms pressure->capacity-ready p50"))
+                if "redeploy_speedup" in res:
+                    metrics.append(metric_row(
+                        f"scn_{sc.name}_{backend}_redeploy_speedup",
+                        res["redeploy_speedup"],
+                        "x first-deploy/redeploy (snapshot restore)"))
             out_scenarios.append(entry)
 
         meta = {

@@ -10,6 +10,7 @@ parallel worker processes.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.autoscaler import (LeadTimePolicy, QueueDepthPolicy,
@@ -168,10 +169,27 @@ class Scenario:
     def rates_for(self, backend: str, smoke: bool = False) -> Sequence[float]:
         """Rate grid for one backend; the ``"*"`` key is the fallback grid
         for backends without an explicit entry (lets a scenario run
-        against any registered backend)."""
+        against any registered backend).
+
+        Falling through to ``"*"`` when the table carries explicit
+        per-backend grids emits a one-line warning naming the backend: a
+        fallback grid is sized for somebody else's knee, and silently
+        reusing it has hidden backends sweeping entirely past their cliff
+        (quark, pre-PR 3).  A table whose *only* key is ``"*"`` (e.g. the
+        trace-replay scenario, where the trace fixes the rate) is a
+        deliberate one-grid-for-all and stays silent."""
         table = (self.smoke_rates if smoke and self.smoke_rates
                  else self.rates) or {}
-        return table.get(backend, table.get("*", ()))
+        if backend in table:
+            return table[backend]
+        fallback = table.get("*", ())
+        if fallback and any(k != "*" for k in table):
+            warnings.warn(
+                f"scenario {self.name!r}: backend {backend!r} has no "
+                f"explicit rate grid; falling back to the '*' grid "
+                f"{tuple(fallback)} — size a knee-specific grid for it",
+                RuntimeWarning, stacklevel=2)
+        return fallback
 
 def zipf_mix(n_functions: int, zipf_a: float = 1.5,
              work_us: float = AES_600B_WORK_US,

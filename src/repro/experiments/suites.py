@@ -70,11 +70,15 @@ def build_scenarios() -> Dict[str, Scenario]:
                    "junctiond": (2000.0, 5000.0, 9000.0, 12000.0, 13000.0,
                                  14000.0),
                    "quark": (250.0, 500.0, 750.0, 1000.0, 1250.0),
-                   "wasm": (500.0, 1000.0, 1500.0, 1750.0, 2000.0)},
+                   "wasm": (500.0, 1000.0, 1500.0, 1750.0, 2000.0),
+                   "firecracker": (500.0, 900.0, 1100.0, 1250.0),
+                   "gvisor": (500.0, 850.0, 1050.0, 1200.0)},
             smoke_rates={"containerd": (1000.0, 1500.0, 1750.0),
                          "junctiond": (2000.0, 9000.0, 12000.0),
                          "quark": (500.0, 750.0, 1000.0),
-                         "wasm": (1000.0, 1500.0, 2000.0)},
+                         "wasm": (1000.0, 1500.0, 2000.0),
+                         "firecracker": (900.0, 1100.0),
+                         "gvisor": (850.0, 1050.0)},
             duration_s=1.5, seeds=(3,), slo_p99_ms=10.0, claims_kind="fig6",
             tags=("paper", "throughput")),
         Scenario(
@@ -94,9 +98,12 @@ def build_scenarios() -> Dict[str, Scenario]:
                    "junctiond": (1500.0, 4000.0, 8000.0),
                    "quark": (400.0, 700.0, 1000.0),
                    "wasm": (700.0, 1200.0, 1700.0),
+                   "firecracker": (500.0, 900.0, 1300.0),
+                   "gvisor": (450.0, 800.0, 1200.0),
                    "*": (600.0, 1000.0, 1400.0)},
             smoke_rates={"containerd": (1000.0,), "junctiond": (4000.0,),
                          "quark": (700.0,), "wasm": (1200.0,),
+                         "firecracker": (900.0,), "gvisor": (800.0,),
                          "*": (1000.0,)},
             duration_s=1.0, n_cores=36, seeds=(0,), slo_p99_ms=10.0,
             tags=("multitenant",)),
@@ -111,9 +118,12 @@ def build_scenarios() -> Dict[str, Scenario]:
                    "junctiond": (1500.0, 4000.0, 8000.0),
                    "quark": (300.0, 600.0, 900.0),
                    "wasm": (500.0, 800.0, 1100.0),
+                   "firecracker": (350.0, 700.0, 1050.0),
+                   "gvisor": (350.0, 650.0, 1000.0),
                    "*": (400.0, 800.0, 1200.0)},
             smoke_rates={"containerd": (800.0,), "junctiond": (4000.0,),
                          "quark": (600.0,), "wasm": (800.0,),
+                         "firecracker": (700.0,), "gvisor": (650.0,),
                          "*": (800.0,)},
             duration_s=1.2, seeds=(1,), slo_p99_ms=10.0,
             tags=("bursty",)),
@@ -127,9 +137,12 @@ def build_scenarios() -> Dict[str, Scenario]:
                    "junctiond": (2000.0, 6000.0),
                    "quark": (450.0, 600.0),
                    "wasm": (700.0, 1200.0),
+                   "firecracker": (550.0, 900.0),
+                   "gvisor": (500.0, 800.0),
                    "*": (600.0, 1000.0)},
             smoke_rates={"containerd": (1000.0,), "junctiond": (6000.0,),
                          "quark": (600.0,), "wasm": (1200.0,),
+                         "firecracker": (900.0,), "gvisor": (800.0,),
                          "*": (1000.0,)},
             duration_s=1.0, seeds=(2,), slo_p99_ms=10.0,
             tags=("diurnal",)),
@@ -145,9 +158,12 @@ def build_scenarios() -> Dict[str, Scenario]:
                    "junctiond": (1500.0, 4000.0, 8000.0),
                    "quark": (300.0, 600.0, 900.0),
                    "wasm": (500.0, 1000.0, 1500.0),
+                   "firecracker": (350.0, 750.0, 1100.0),
+                   "gvisor": (350.0, 700.0, 1000.0),
                    "*": (400.0, 800.0, 1200.0)},
             smoke_rates={"containerd": (800.0,), "junctiond": (4000.0,),
                          "quark": (600.0,), "wasm": (1000.0,),
+                         "firecracker": (750.0,), "gvisor": (700.0,),
                          "*": (800.0,)},
             duration_s=1.0, seeds=(4,), slo_p99_ms=25.0,
             tags=("heavytail",)),
@@ -175,9 +191,12 @@ def build_scenarios() -> Dict[str, Scenario]:
                    "junctiond": (1500.0, 4000.0, 8000.0),
                    "quark": (300.0, 600.0, 900.0),
                    "wasm": (500.0, 800.0, 1100.0),
+                   "firecracker": (350.0, 700.0, 1050.0),
+                   "gvisor": (350.0, 650.0, 1000.0),
                    "*": (400.0, 800.0, 1200.0)},
             smoke_rates={"containerd": (800.0,), "junctiond": (4000.0,),
                          "quark": (600.0,), "wasm": (800.0,),
+                         "firecracker": (700.0,), "gvisor": (650.0,),
                          "*": (800.0,)},
             duration_s=1.2, seeds=(1,), slo_p99_ms=15.0,
             claims_kind="autoscale",
@@ -196,9 +215,12 @@ def build_scenarios() -> Dict[str, Scenario]:
                    "junctiond": (2000.0, 6000.0),
                    "quark": (450.0, 600.0),
                    "wasm": (700.0, 1200.0),
+                   "firecracker": (550.0, 900.0),
+                   "gvisor": (500.0, 800.0),
                    "*": (600.0, 1000.0)},
             smoke_rates={"containerd": (1000.0,), "junctiond": (6000.0,),
                          "quark": (600.0,), "wasm": (1200.0,),
+                         "firecracker": (900.0,), "gvisor": (800.0,),
                          "*": (1000.0,)},
             duration_s=1.0, seeds=(2,), slo_p99_ms=15.0,
             tags=("autoscale", "diurnal")),
@@ -213,7 +235,9 @@ def build_scenarios() -> Dict[str, Scenario]:
                                       target_inflight_per_replica=2.0,
                                       max_replicas=16),
             rates={"containerd": (600.0,), "junctiond": (2000.0,),
-                   "quark": (450.0,), "wasm": (700.0,), "*": (600.0,)},
+                   "quark": (450.0,), "wasm": (700.0,),
+                   "firecracker": (550.0,), "gvisor": (500.0,),
+                   "*": (600.0,)},
             duration_s=3.0, warmup_frac=0.1, storm_functions=16,
             seeds=(0,), slo_p99_ms=15.0, claims_kind="interference",
             tags=("mixed", "coldstart", "autoscale", "provisioning")),

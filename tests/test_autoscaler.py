@@ -67,10 +67,18 @@ def test_policies_clamp_to_min_max():
 def test_lead_time_period_and_headroom_derive_from_coldstart():
     pol = LeadTimePolicy(target_inflight_per_replica=2.0)
     periods = {b: pol.control_period(get_backend_class(b).coldstart)
-               for b in FOUR}
-    # sub-ms scale-up -> floor; 100s-of-ms scale-up -> ceiling
+               for b in FOUR + ("firecracker", "gvisor")}
+    # sub-ms scale-up -> floor; 100s-of-ms scale-up -> ceiling.  The
+    # snapshotting microVM's 5 ms restore also lands on the floor (its
+    # ColdStartModel advertises the restore path as the scale cost),
+    # while gvisor's 240 ms Sentry bring-up clamps at the ceiling.
     assert periods["junctiond"] == periods["wasm"] == pol.period_floor_s
-    assert periods["containerd"] == periods["quark"] == pol.period_ceil_s
+    assert periods["firecracker"] == pytest.approx(max(
+        pol.period_floor_s,
+        pol.lead_mult * get_backend_class("firecracker").coldstart.scale_seconds))
+    assert periods["firecracker"] < pol.period_ceil_s
+    assert periods["containerd"] == periods["quark"] == \
+        periods["gvisor"] == pol.period_ceil_s
     # headroom covers the arrivals landing during the scale-up lead time:
     # at 1000 rps a 270 ms containerd scale-up eats 270 arrivals (135
     # replicas at target 2 -> clamped), junctiond's 0.2 ms eats ~0
@@ -178,9 +186,12 @@ def test_scale_up_reaction_time_tracks_coldstart_class(name):
 
 
 def test_reaction_time_ordering_across_backends():
-    """The control-plane ordering the cold-start asymmetry buys:
-    junctiond reacts fastest, wasm close behind, containerd two orders
-    slower, quark slowest (guest-kernel boot on top)."""
+    """The control-plane ordering the cold-start asymmetry buys, across
+    the full isolation spectrum: junctiond reacts fastest, wasm close
+    behind, the microVM's snapshot restore single-digit-ms, gvisor just
+    under containerd (Sentry bring-up, no guest Linux), containerd two
+    orders slower than junctiond, quark slowest (guest-kernel boot on
+    top)."""
     def reaction_s(name):
         rt, asc = _autoscaled(name, LeadTimePolicy(
             target_inflight_per_replica=2.0), max_cores=8)
@@ -189,9 +200,14 @@ def test_reaction_time_ordering_across_backends():
         ups = [e for e in asc.scale_events if e.up and e.ready]
         return ups[0].reaction_s
 
-    r = {b: reaction_s(b) for b in FOUR}
-    assert r["junctiond"] < r["wasm"] < r["containerd"] <= r["quark"]
+    r = {b: reaction_s(b) for b in FOUR + ("firecracker", "gvisor")}
+    assert (r["junctiond"] < r["wasm"] < r["firecracker"]
+            < r["gvisor"] < r["containerd"] <= r["quark"])
     assert r["containerd"] / r["junctiond"] > 100
+    # the snapshot restore keeps the microVM's reaction junctiond-class
+    # (single-digit ms), not container-class (hundreds of ms)
+    assert r["firecracker"] < 30 * r["junctiond"]
+    assert r["containerd"] > 10 * r["firecracker"]
 
 
 def test_reaction_time_not_inflated_by_stale_pressure():

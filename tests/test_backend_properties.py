@@ -1,0 +1,136 @@
+"""Property tests over the backend registry (hypothesis; skipped when it
+is not installed, see _hypothesis_compat): every registered backend's
+ColdStartModel has strictly positive timings, lifecycle scale cost is
+monotone in the replica count, and LeadTimePolicy's derived control
+period / desired replica count always land inside their clamp bands for
+arbitrary cold-start models — not just the six shipped ones."""
+import math
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (ColdStartModel, FaasdRuntime, FunctionSpec,
+                        LeadTimePolicy, QueueDepthPolicy, Simulator,
+                        available_backends, get_backend_class)
+from repro.core.backends import SnapshotColdStartModel
+
+ALL_BACKENDS = available_backends()
+
+
+def _drive(sim, gen):
+    p = sim.process(gen)
+    p.completion.callbacks.append(lambda _v: sim.stop())
+    sim.run()
+    assert p.done
+    return p.result
+
+
+# ---------------------------------------------------------------------------
+# Registry-wide model invariants (always run; the registry is finite).
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_coldstart_timings_strictly_positive(name):
+    cs = get_backend_class(name).coldstart
+    assert cs.deploy_seconds > 0
+    assert cs.scale_seconds > 0
+    assert cs.query_seconds > 0
+    if isinstance(cs, SnapshotColdStartModel):
+        assert 0 < cs.restore_seconds < cs.deploy_seconds
+        # the policy-visible scale cost is the restore path
+        assert cs.scale_seconds == pytest.approx(cs.restore_seconds)
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_lead_time_period_in_band_for_every_registered_backend(name):
+    pol = LeadTimePolicy()
+    period = pol.control_period(get_backend_class(name).coldstart)
+    assert pol.period_floor_s <= period <= pol.period_ceil_s
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle property: scaling 1 -> n costs monotonically more sim time.
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    name=st.sampled_from(ALL_BACKENDS),
+    lo=st.integers(1, 6),
+    extra=st.integers(0, 6),
+    seed=st.integers(0, 1_000),
+)
+def test_property_scale_cost_monotone_in_replica_count(name, lo, extra, seed):
+    """PROPERTY: for any backend, time(scale 1->lo) <= time(scale 1->hi)
+    when lo <= hi — adding more replicas never gets cheaper (restores,
+    uProc spawns and container tasks all cost >= 0 each)."""
+    hi = lo + extra
+
+    def scale_cost(replicas):
+        sim = Simulator(seed=seed)
+        rt = FaasdRuntime(sim, backend=name)
+        rt.deploy_blocking(FunctionSpec(name="f"))
+        t0 = sim.now
+        _drive(sim, rt.backend.scale("f", replicas))
+        return sim.now - t0
+
+    assert scale_cost(lo) <= scale_cost(hi) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Policy properties for arbitrary cold-start models.
+
+
+def _model(deploy_ms, scale_factor, query_ms):
+    return ColdStartModel(deploy_ms=deploy_ms, scale_factor=scale_factor,
+                          query_ms=query_ms)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    deploy_ms=st.floats(1e-3, 1e6, allow_nan=False, allow_infinity=False),
+    scale_factor=st.floats(0.0, 10.0, allow_nan=False),
+    floor=st.floats(1e-4, 1.0, allow_nan=False),
+    ceil_mult=st.floats(1.0, 1e3, allow_nan=False),
+    lead_mult=st.floats(0.1, 10.0, allow_nan=False),
+)
+def test_property_lead_time_period_always_inside_clamp_band(
+        deploy_ms, scale_factor, floor, ceil_mult, lead_mult):
+    """PROPERTY: the derived control period lands inside
+    [period_floor_s, period_ceil_s] for ANY cold-start model — a backend
+    can never drive the controller into a zero-period spin loop or an
+    unbounded sampling interval."""
+    ceil = floor * ceil_mult
+    pol = LeadTimePolicy(period_floor_s=floor, period_ceil_s=ceil,
+                         lead_mult=lead_mult)
+    period = pol.control_period(_model(deploy_ms, scale_factor, 1.0))
+    assert floor <= period <= ceil
+    assert math.isfinite(period)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    deploy_ms=st.floats(1e-3, 1e6, allow_nan=False, allow_infinity=False),
+    scale_factor=st.floats(0.0, 10.0, allow_nan=False),
+    inflight=st.floats(0.0, 1e9, allow_nan=False),
+    replicas=st.integers(0, 10_000),
+    rate=st.floats(0.0, 1e6, allow_nan=False),
+    min_replicas=st.integers(1, 8),
+    extra=st.integers(0, 24),
+    target=st.floats(0.1, 100.0, allow_nan=False),
+)
+def test_property_desired_replicas_always_clamped(
+        deploy_ms, scale_factor, inflight, replicas, rate, min_replicas,
+        extra, target):
+    """PROPERTY: both policies' desired() stays inside
+    [min_replicas, max_replicas] for arbitrary load signals and models."""
+    cs = _model(deploy_ms, scale_factor, 1.0)
+    max_replicas = min_replicas + extra
+    for pol in (QueueDepthPolicy(min_replicas=min_replicas,
+                                 max_replicas=max_replicas,
+                                 target_inflight_per_replica=target),
+                LeadTimePolicy(min_replicas=min_replicas,
+                               max_replicas=max_replicas,
+                               target_inflight_per_replica=target)):
+        want = pol.desired(inflight=inflight, replicas=replicas,
+                           arrival_rate_rps=rate, coldstart=cs)
+        assert min_replicas <= want <= max_replicas

@@ -1,8 +1,14 @@
 """Execution-backend API tests: the registry, a parametrized conformance
 suite every registered backend must pass (uniform deploy/scale/query/
-remove lifecycle semantics), the fig5-style latency and cold-start
-orderings across the 4-backend matrix, the runner on arbitrary backend
-sets, and the artifact-compare / --list tooling."""
+remove lifecycle semantics, plus the snapshot-cache invariants for
+backends that keep one), the fig5-style latency and cold-start orderings
+across the 6-backend isolation spectrum, the runner on arbitrary backend
+sets, and the artifact-compare / --list tooling.
+
+The conformance suite parametrizes over ``available_backends()`` — the
+live registry — so registering a 7th backend gets it lifecycle (and,
+if it carries a ``snapshots`` cache, snapshot-contract) coverage with
+zero test edits."""
 import dataclasses
 import json
 
@@ -14,11 +20,15 @@ from repro.core import (FaasdRuntime, FunctionSpec, PollingModel, Simulator,
                         get_backend_class, register_backend, run_sequential)
 from repro.core.backends import (ColdStartModel, ExecutionBackend, _REGISTRY,
                                  resolve_backend)
+from repro.core.firecracker import SnapshotCache
+from repro.core.gvisor import GVisor
 from repro.experiments import (ExperimentRunner, build_artifact, get_scenario,
                                metric_row, validate_artifact, write_artifact)
 
 ALL_BACKENDS = available_backends()
 FOUR = ("containerd", "junctiond", "quark", "wasm")
+# the full isolation spectrum, ordered by warm-path latency
+SIX = ("junctiond", "wasm", "containerd", "firecracker", "gvisor", "quark")
 
 
 def _drive(sim, gen):
@@ -39,8 +49,8 @@ def _runtime(backend, seed=0, **kw):
 # Registry.
 
 
-def test_registry_contains_the_four_builtins():
-    assert set(ALL_BACKENDS) >= set(FOUR)
+def test_registry_contains_the_six_builtins():
+    assert set(ALL_BACKENDS) >= set(SIX)
 
 
 def test_unknown_backend_name_lists_registered():
@@ -210,6 +220,141 @@ def test_junctiond_isolated_scale_reaps_sibling_instances():
     assert len(be.scheduler.instances) == base
 
 
+# ---------------------------------------------------------------------------
+# Snapshot-cache lifecycle contract: conformance for every registered
+# backend that keeps a per-function snapshot cache (today: firecracker).
+# Invariants: deploy warms the snapshot, a redeploy restores from it
+# (second cold start strictly cheaper than the first), remove evicts it
+# (the next deploy pays a full boot again and re-warms it).
+
+
+def _snapshotting(name):
+    rt = _runtime(name)
+    if not hasattr(rt.backend, "snapshots"):
+        pytest.skip(f"{name} keeps no snapshot cache")
+    return rt
+
+
+def _deploy_s(rt, fn="aes", **kw):
+    t0 = rt.sim.now
+    rt.deploy_blocking(FunctionSpec(name=fn, **kw))
+    return rt.sim.now - t0
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_snapshot_deploy_warms_and_second_cold_start_is_cheaper(name):
+    rt = _snapshotting(name)
+    be = rt.backend
+    assert "aes" not in be.snapshots
+    first = _deploy_s(rt)
+    assert "aes" in be.snapshots        # deploy warmed the snapshot
+    second = _deploy_s(rt)              # redeploy restores from it
+    assert second < first
+    assert be.lookup("aes").ready
+
+
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_snapshot_remove_evicts_and_redeploy_rewarms(name):
+    rt = _snapshotting(name)
+    be = rt.backend
+    first = _deploy_s(rt)
+    be.remove("aes")
+    assert "aes" not in be.snapshots    # remove evicts the snapshot
+    assert be.lookup("aes") is None
+    again = _deploy_s(rt)               # full boot again, snapshot re-warmed
+    assert again == pytest.approx(first)
+    assert "aes" in be.snapshots
+    second = _deploy_s(rt)
+    assert second < again
+
+
+def test_firecracker_restore_is_an_order_faster_than_boot():
+    rt = _runtime("firecracker")
+    boot = _deploy_s(rt)
+    restore = _deploy_s(rt)
+    assert boot / restore >= 10         # ~125 ms boot vs ~5 ms restore
+    assert rt.backend.boots == 1 and rt.backend.restores == 1
+    assert rt.backend.lookup("aes").restored
+
+
+def test_firecracker_scale_up_restores_from_the_snapshot():
+    rt = _runtime("firecracker")
+    be, sim = rt.backend, rt.sim
+    _deploy_s(rt)
+    t0 = sim.now
+    _drive(sim, be.scale("aes", 4))     # 3 new replicas, all restores
+    assert sim.now - t0 == pytest.approx(3 * be.coldstart.restore_seconds)
+    assert be.lookup("aes").replicas == 4
+    t0 = sim.now
+    _drive(sim, be.scale("aes", 1))     # reaping microVMs costs no init
+    assert sim.now == t0
+    assert be.lookup("aes").replicas == 1
+
+
+def test_firecracker_snapshot_cache_capacity_evicts_lru():
+    sim = Simulator(seed=0)
+    be = get_backend_class("firecracker")(sim, snapshot_capacity=2)
+    rt = FaasdRuntime(sim, backend=be)
+    rt.deploy_blocking(FunctionSpec(name="a"))
+    rt.deploy_blocking(FunctionSpec(name="b"))
+    # touch a so b is the least recently used snapshot
+    assert be.snapshots.get("a") is not None
+    rt.deploy_blocking(FunctionSpec(name="c"))      # capacity 2: evicts b
+    assert "a" in be.snapshots and "c" in be.snapshots
+    assert "b" not in be.snapshots
+    assert be.snapshots.evictions == 1
+    # scaling b up after its snapshot was evicted re-boots (re-warming the
+    # cache) instead of restoring from a snapshot that no longer exists
+    t0 = sim.now
+    _drive(sim, be.scale("b", 2))
+    assert sim.now - t0 == pytest.approx(be.coldstart.deploy_seconds)
+    assert "b" in be.snapshots
+
+
+def test_snapshot_cache_rejects_nonpositive_capacity():
+    with pytest.raises(ValueError, match="capacity"):
+        SnapshotCache(0)
+
+
+def test_snapshot_coldstart_model_derives_scale_from_restore():
+    """scale_seconds and scale_factor are both derived from the restore
+    path (a scale-up never pays a full boot), so a caller cannot
+    desynchronise the marginal replica cost from restore_ms; nonsensical
+    restore timings fail at construction."""
+    from repro.core import SnapshotColdStartModel
+    m = SnapshotColdStartModel(deploy_ms=100.0, query_ms=1.0, restore_ms=4.0)
+    assert m.scale_seconds == pytest.approx(m.restore_seconds) == 0.004
+    assert m.scale_factor == pytest.approx(0.04)
+    # an explicit (stale) scale_factor is overridden, never trusted
+    stale = SnapshotColdStartModel(deploy_ms=100.0, query_ms=1.0,
+                                   restore_ms=4.0, scale_factor=0.6)
+    assert stale.scale_factor == pytest.approx(0.04)
+    with pytest.raises(ValueError, match="restore_ms"):
+        SnapshotColdStartModel(deploy_ms=100.0, query_ms=1.0)  # unset
+    with pytest.raises(ValueError, match="restore_ms"):
+        SnapshotColdStartModel(deploy_ms=100.0, query_ms=1.0,
+                               restore_ms=200.0)
+
+
+def test_gvisor_platform_knob_selects_cost_tables():
+    """The KVM platform (the registered default) is measurably faster on
+    the warm path than ptrace; both share the lifecycle and cold-start
+    class, and an unknown platform fails loudly."""
+    def median(platform):
+        sim = Simulator(seed=0)
+        be = GVisor(sim, platform=platform)
+        rt = FaasdRuntime(sim, backend=be)
+        rt.deploy_blocking(FunctionSpec(name="aes"))
+        return run_sequential(rt, "aes", n=40).median_ms
+
+    assert median("kvm") < median("ptrace")
+    assert GVisor(Simulator(), platform="ptrace").runtime.name == "gvisor-ptrace"
+    # resolved by name, the registry default is the KVM tables
+    assert _runtime("gvisor").backend.runtime.name == "gvisor-kvm"
+    with pytest.raises(ValueError, match="unknown gVisor platform"):
+        GVisor(Simulator(), platform="hyperv")
+
+
 @pytest.mark.parametrize("name", ALL_BACKENDS)
 def test_scale_on_undeployed_raises_uniformly(name):
     rt = _runtime(name)
@@ -241,27 +386,36 @@ def _fig5_median_ms(name, seeds=range(3), n=60):
 
 
 def test_fig5_style_warm_latency_ordering():
-    """Warm e2e medians follow the modeled datapaths: kernel-bypass
-    (junctiond) fastest, lightweight wasm beats containers, and quark's
-    interception tax makes it the slowest."""
-    med = {b: _fig5_median_ms(b) for b in FOUR}
-    assert med["junctiond"] < med["wasm"] < med["containerd"] < med["quark"]
+    """Warm e2e medians follow the modeled datapaths across the whole
+    spectrum: kernel-bypass (junctiond) fastest, lightweight wasm beats
+    containers, the microVM's virtio double-stack sits just above plain
+    containers, gVisor's Sentry interception above that, and quark's full
+    guest-kernel tax makes it the slowest."""
+    med = {b: _fig5_median_ms(b) for b in SIX}
+    assert (med["junctiond"] < med["wasm"] < med["containerd"]
+            < med["firecracker"] < med["gvisor"] < med["quark"])
 
 
 def test_coldstart_ordering_across_backends():
-    """Cold starts follow the modeled classes: sub-ms wasm instantiate,
-    paper-measured 3.4 ms Junction init, container-class containerd, and
-    quark's extra guest-kernel boot on top."""
+    """First cold starts follow the modeled classes: sub-ms wasm
+    instantiate, paper-measured 3.4 ms Junction init, the microVM's full
+    boot, gVisor's Sentry bring-up (no guest Linux), container-class
+    containerd, and quark's extra guest-kernel boot on top.  The
+    firecracker *restore* path slots between junctiond and gvisor —
+    that's the gap the snapshot cache buys."""
     def cold_s(name):
         rt = _runtime(name)
         t0 = rt.sim.now
         rt.deploy_blocking(FunctionSpec(name="f"))
         return rt.sim.now - t0
 
-    cold = {b: cold_s(b) for b in FOUR}
+    cold = {b: cold_s(b) for b in SIX}
     assert cold["wasm"] < 1e-3                       # sub-ms instantiate
-    assert cold["wasm"] < cold["junctiond"] < cold["containerd"] < cold["quark"]
+    assert (cold["wasm"] < cold["junctiond"] < cold["firecracker"]
+            < cold["gvisor"] < cold["containerd"] < cold["quark"])
     assert cold["containerd"] / cold["junctiond"] > 50
+    restore = get_backend_class("firecracker").coldstart.restore_seconds
+    assert cold["junctiond"] < restore < cold["gvisor"]
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +440,29 @@ def test_runner_four_backend_matrix_keeps_pair_claims(tmp_path):
     path = tmp_path / "BENCH_matrix.json"
     write_artifact(str(path), doc)
     validate_artifact(json.loads(path.read_text()))
+
+
+def test_storm_measures_snapshot_restore_vs_full_boot():
+    """The cold-start storm runs a redeploy wave: plain backends pay the
+    same cold start again (speedup ~1x), firecracker restores from the
+    snapshots the first wave warmed (>= 10x)."""
+    sc = dataclasses.replace(get_scenario("cold-start-storm"), seeds=(0,),
+                             storm_functions=4,
+                             backends=("containerd", "firecracker"))
+    doc = ExperimentRunner(smoke=True).run_suite([sc], suite="unit")
+    assert not doc["failures"], doc["failures"]
+    res = doc["scenarios"][0]["backends"]
+    for b, r in res.items():
+        assert r["redeploy_median_ms"] > 0
+        assert r["single_redeploy_ms"] > 0
+    assert res["containerd"]["redeploy_speedup"] == pytest.approx(1.0)
+    assert res["firecracker"]["redeploy_speedup"] >= 10
+    assert res["firecracker"]["single_redeploy_ms"] < \
+        res["containerd"]["single_redeploy_ms"]
+    names = {m["name"]: m["value"] for m in doc["metrics"]}
+    assert names["scn_cold-start-storm_firecracker_redeploy_speedup"] >= 10
+    assert names["scn_cold-start-storm_containerd_redeploy_speedup"] == \
+        pytest.approx(1.0)
 
 
 def test_runner_skips_claims_without_the_pair():
@@ -327,37 +504,58 @@ def test_validate_artifact_accepts_v1_and_v2_schemas():
         validate_artifact(v4)
 
 
-def test_rates_fall_back_to_wildcard_grid():
+def test_rates_fall_back_to_wildcard_grid_with_warning():
+    """The '*' fallback still works for unknown backends, but it is no
+    longer silent when the scenario carries explicit per-backend grids —
+    the warning names the backend that fell through (the PR 3 failure
+    mode was quark silently sweeping past its knee on the containerd
+    grid)."""
     sc = get_scenario("multi-tenant-mix")
     assert sc.rates_for("junctiond") == (1500.0, 4000.0, 8000.0)
-    # unregistered-in-grid backends use the '*' fallback
-    assert sc.rates_for("some-new-backend") == sc.rates["*"]
-    assert sc.rates_for("some-new-backend", smoke=True) == sc.smoke_rates["*"]
+    with pytest.warns(RuntimeWarning, match="some-new-backend"):
+        assert sc.rates_for("some-new-backend") == sc.rates["*"]
+    with pytest.warns(RuntimeWarning, match="multi-tenant-mix"):
+        assert sc.rates_for("some-new-backend", smoke=True) == \
+            sc.smoke_rates["*"]
     fig6 = get_scenario("paper-fig6")
-    for b in FOUR:                  # fig6 grids are explicit per backend
+    for b in SIX:                   # fig6 grids are explicit per backend
         assert fig6.rates_for(b)
+
+
+def test_wildcard_only_grid_stays_silent():
+    """trace-replay's rate table is {'*': ...} by design (the trace fixes
+    the rate); a deliberate one-grid-for-all must not warn."""
+    import warnings as _warnings
+    sc = get_scenario("trace-replay")
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        for b in SIX:
+            assert sc.rates_for(b) == (0.0,)
 
 
 @pytest.mark.parametrize("scenario", ["multi-tenant-mix", "bursty-burst",
                                       "diurnal-drift", "heavy-tail-mix",
                                       "autoscale-burst", "autoscale-diurnal",
                                       "mixed-cold-warm"])
-def test_quark_and_wasm_have_knee_sized_grids(scenario):
-    """quark/wasm get explicit per-scenario rate grids sized to their own
-    knees instead of riding the '*' fallback (which reuses the containerd
-    grid and often sits past quark's knee, wasting sweep samples)."""
+def test_non_pair_backends_have_knee_sized_grids(scenario):
+    """quark/wasm/firecracker/gvisor get explicit per-scenario rate grids
+    sized to their own knees instead of riding the '*' fallback (which
+    reuses the containerd grid and often sits past quark's knee, wasting
+    sweep samples)."""
     sc = get_scenario(scenario)
-    for b in ("quark", "wasm"):
+    for b in ("quark", "wasm", "firecracker", "gvisor"):
         assert b in sc.rates, f"{scenario} missing explicit {b} grid"
         assert sc.rates_for(b) != sc.rates["*"]
         if sc.smoke_rates:
             assert b in sc.smoke_rates
-    # quark's interception tax puts its knee below containerd's on every
-    # workload; wasm's grid tracks its own measured knee, not containerd's
-    quark = sc.rates_for("quark")
     containerd = sc.rates_for("containerd")
-    assert max(quark) < max(containerd)
-    assert min(quark) <= min(containerd)
+    # interception/virtio taxes put every sandboxed knee at or below
+    # containerd's on the same workload, with quark lowest of the four
+    for b in ("quark", "firecracker", "gvisor"):
+        assert max(sc.rates_for(b)) <= max(containerd)
+        assert min(sc.rates_for(b)) <= min(containerd)
+    assert max(sc.rates_for("quark")) < max(containerd)
+    assert max(sc.rates_for("gvisor")) <= max(sc.rates_for("firecracker"))
 
 
 # ---------------------------------------------------------------------------
@@ -416,6 +614,52 @@ def test_compare_cli_exit_codes(tmp_path):
     write_artifact(str(bad), _metrics_doc(fig6_throughput_ratio=3.0))
     assert main([str(old), str(good)]) == 0
     assert main([str(old), str(bad), "--threshold", "0.2"]) == 1
+
+
+def test_compare_v3_artifact_against_v2_baseline(tmp_path):
+    """Regression: a schema-v2 baseline (pre-autoscaler commits) must diff
+    cleanly against a v3 candidate, and the direction-aware threshold must
+    treat ``autoscale_reaction_ratio`` as higher-is-better — a ratio
+    *drop* beyond the threshold regresses, a rise is an improvement."""
+    from benchmarks.compare import compare_metrics, main, regressions
+
+    def doc(version, **values):
+        d = build_artifact("unit", [{"name": "s", "mode": "open",
+                                     "description": "d",
+                                     "backend_set": ["containerd"],
+                                     "backends": {"containerd": {}}}],
+                           [metric_row(k, v, "d") for k, v in values.items()],
+                           [])
+        d["schema_version"] = version
+        validate_artifact(d)
+        return d
+
+    v2 = doc(2, autoscale_reaction_ratio=40.0, scn_s_containerd_median=900.0)
+    # ratio halves (regression despite "going down" being good for the
+    # latency metric next to it), latency improves
+    worse = doc(3, autoscale_reaction_ratio=20.0,
+                scn_s_containerd_median=700.0)
+    rows, new_only = compare_metrics(v2, worse, threshold=0.10)
+    by = {r["name"]: r for r in rows}
+    assert by["autoscale_reaction_ratio"]["status"] == "regressed"
+    assert by["autoscale_reaction_ratio"]["direction"] == "higher"
+    assert by["scn_s_containerd_median"]["status"] == "improved"
+    assert {r["name"] for r in regressions(rows)} == \
+        {"autoscale_reaction_ratio"}
+    assert not new_only
+    # ratio rises within/beyond threshold: never a regression
+    better = doc(3, autoscale_reaction_ratio=55.0,
+                 scn_s_containerd_median=900.0)
+    rows, _ = compare_metrics(v2, better, threshold=0.10)
+    assert not regressions(rows)
+    # end to end through the CLI, v2 file as the baseline
+    old_p, bad_p, good_p = (tmp_path / n for n in
+                            ("v2.json", "bad.json", "good.json"))
+    write_artifact(str(old_p), v2)
+    write_artifact(str(bad_p), worse)
+    write_artifact(str(good_p), better)
+    assert main([str(old_p), str(bad_p)]) == 1
+    assert main([str(old_p), str(good_p)]) == 0
 
 
 # ---------------------------------------------------------------------------
