@@ -8,7 +8,10 @@ Two families of suites:
   containerd/junctiond pair; ``--backends`` widens it to any registered
   set), emitting a machine-readable ``BENCH_<suite>.json`` artifact
   (``--json``) with per-scenario latency histograms, knee/SLO metrics,
-  and paper-claim deltas computed from the claims pair.
+  and paper-claim deltas computed from the claims pair.  Open-mode
+  scenarios locate their SLO knee with the adaptive search by default
+  (``--search-budget`` caps its per-backend probe count); scenarios that
+  pin explicit rate grids sweep them unchanged.
 * ``--suite legacy`` (default) — the original one-module-per-figure
   benches, printing ``name,value,derived`` CSV.
 * ``--list`` — enumerate registered backends and scenarios (names, modes,
@@ -108,10 +111,20 @@ def run_list(args) -> int:
     print("\nscenarios:")
     for name, sc in sorted(build_scenarios().items()):
         asc = sc.autoscaler.policy if sc.autoscaler else "-"
+        search = sc.search_spec()
+        load = "search" if search is not None else \
+            "grid" if sc.mode in ("open", "mixed") and sc.rates else "-"
         print(f"  {name:17s} mode={sc.mode:6s} arrival={sc.arrival.kind:8s} "
-              f"backends={','.join(sc.backends)} "
+              f"load={load:6s} backends={','.join(sc.backends)} "
               f"claims={sc.claims_kind or '-'} autoscaler={asc}")
-        if sc.mode in ("open", "mixed") and sc.rates:
+        if search is not None:
+            print(f"    search: rel_tol={search.rel_tol:g} "
+                  f"max_probes={search.max_probes} "
+                  f"(smoke {search.smoke_rel_tol:g}/"
+                  f"{search.smoke_max_probes}) "
+                  f"growth={search.growth:g} "
+                  f"rate0={'auto' if search.rate0 is None else search.rate0}")
+        elif sc.mode in ("open", "mixed") and sc.rates:
             for b, grid in sorted(sc.rates.items()):
                 print(f"    rates[{b}] = {', '.join(f'{r:g}' for r in grid)}")
     print("\nsuites:")
@@ -130,6 +143,19 @@ def run_scenarios(args) -> int:
         matrix = _parse_backends(args.backends)
         scenarios = [dataclasses.replace(sc, backends=matrix)
                      for sc in scenarios]
+    if args.search_budget is not None:
+        if args.search_budget < 1:
+            raise SystemExit("--search-budget must be >= 1")
+        # cap the per-(backend, seed) open-loop sample budget of every
+        # searched scenario; grid/mixed/closed scenarios are unaffected
+        def _capped(sc):
+            spec = sc.search_spec()
+            if spec is None:
+                return sc
+            return dataclasses.replace(sc, search=dataclasses.replace(
+                spec, max_probes=args.search_budget,
+                smoke_max_probes=args.search_budget))
+        scenarios = [_capped(sc) for sc in scenarios]
     backend_union = sorted({b for sc in scenarios for b in sc.backends})
     print(f"suite={args.suite}: {len(scenarios)} scenarios x "
           f"{{{', '.join(backend_union)}}}, duration_scale={scale:.2f}, "
@@ -142,6 +168,17 @@ def run_scenarios(args) -> int:
             bits = [f"n={res.get('n', 0)}"]
             if res.get("knee_rps") is not None and entry["mode"] == "open":
                 bits.append(f"knee={res['knee_rps']:.0f}rps")
+            if "search" in res:
+                s = res["search"]
+                # non-convergence has two distinct causes: the probe
+                # budget ran out, or no failing bound was found within it
+                # (knee is only a lower bound / nothing was sustainable)
+                tag = "" if s["converged"] else (
+                    " (budget)" if any(t["n_probes"] >=
+                                       s["spec"]["max_probes"]
+                                       for t in s["trace"])
+                    else " (unbounded)")
+                bits.append(f"probes={s['n_probes']}{tag}")
             if isinstance(res.get("median_ms"), float):
                 bits.append(f"median={res['median_ms']:.3f}ms")
                 bits.append(f"p99={res['p99_ms']:.3f}ms")
@@ -187,6 +224,10 @@ def main(argv=None) -> int:
                     help="comma-separated registered backend names to run "
                          "every scenario against (default: each scenario's "
                          "own matrix, normally containerd,junctiond)")
+    ap.add_argument("--search-budget", type=int, default=None, metavar="N",
+                    help="cap the adaptive knee search at N open-loop "
+                         "probes per (backend, seed); applies to every "
+                         "search-mode scenario (grid scenarios unaffected)")
     ap.add_argument("--list", action="store_true",
                     help="list registered backends, scenarios and suites, "
                          "then exit")
@@ -194,10 +235,11 @@ def main(argv=None) -> int:
     if args.list:
         return run_list(args)
     if args.suite == "legacy":
-        if args.duration != 1.0 or args.workers or args.backends:
-            print("note: --duration/--workers/--backends only apply to "
-                  "scenario suites; the legacy suite ignores them",
-                  file=sys.stderr)
+        if args.duration != 1.0 or args.workers or args.backends \
+                or args.search_budget is not None:
+            print("note: --duration/--workers/--backends/--search-budget "
+                  "only apply to scenario suites; the legacy suite ignores "
+                  "them", file=sys.stderr)
         return run_legacy(args)
     return run_scenarios(args)
 

@@ -24,11 +24,13 @@ from repro.core.resources import CorePool
 from repro.core.scheduler import JunctionScheduler, PollingModel
 from repro.core.simulator import Event, Process, Queue, Simulator
 from repro.core.workload import (ArrivalProcess, BurstyArrivals,
-                                 DiurnalArrivals, LatencySummary,
+                                 DiurnalArrivals, KneeSearch,
+                                 KneeSearchResult, LatencySummary,
                                  PoissonArrivals, TraceReplay,
-                                 heavy_tailed_work, knee_of_curve,
-                                 run_mixed_open_loop, run_open_loop,
-                                 run_sequential, sustainable_throughput)
+                                 heavy_tailed_work, knee_index_of_curve,
+                                 knee_of_curve, run_mixed_open_loop,
+                                 run_open_loop, run_sequential,
+                                 sustainable_throughput)
 
 __all__ = [
     "Autoscaler", "ScalePolicy", "QueueDepthPolicy", "LeadTimePolicy",
@@ -46,5 +48,6 @@ __all__ = [
     "sustainable_throughput",
     "ArrivalProcess", "PoissonArrivals", "BurstyArrivals", "DiurnalArrivals",
     "TraceReplay", "heavy_tailed_work", "knee_of_curve",
+    "knee_index_of_curve", "KneeSearch", "KneeSearchResult",
     "run_mixed_open_loop",
 ]

@@ -62,6 +62,20 @@ def run_sequential(runtime: FaasdRuntime, fn_name: str, n: int = 100,
     return LatencySummary.of([r.e2e * 1e3 for r in runtime.records[start:]])
 
 
+def _completion_rps(done, t_start: float, t_min_end: float) -> float:
+    """Completions per second of *busy* time (first window instant to the
+    last completion): under overload this approximates the service
+    capacity no matter how the observation window truncates the backlog,
+    where the drain-inclusive achieved rate over-counts (everything
+    eventually completes) and the loaded-window rate under-counts (the
+    queue delays every completion past the window).  The knee search's
+    bracketing signal."""
+    if not done:
+        return 0.0
+    span = max(1e-9, max(max(r.t_done for r in done), t_min_end) - t_start)
+    return len(done) / span
+
+
 def run_open_loop(runtime: FaasdRuntime, fn_name: str, rate_rps: float,
                   duration_s: float = 2.0, warmup_s: float = 0.3,
                   max_outstanding: int = 20000,
@@ -76,6 +90,13 @@ def run_open_loop(runtime: FaasdRuntime, fn_name: str, rate_rps: float,
     """
     sim = runtime.sim
     outstanding = [0]
+    admitted = [0]                  # admitted arrivals past warmup: the
+    # completed_frac denominator must count every admitted request, not
+    # just the ones that finished (records only exist on completion)
+    rejected0 = runtime.rejected    # report this run's delta, not the
+    # runtime-lifetime counter: knee-search bracketing reuses one runtime
+    # across rates, and a cumulative count would fail rejected==0 forever
+    t_warm = sim.now + warmup_s
 
     def arrivals():
         t_end = sim.now + duration_s
@@ -85,6 +106,8 @@ def run_open_loop(runtime: FaasdRuntime, fn_name: str, rate_rps: float,
                 runtime.rejected += 1
                 continue
             outstanding[0] += 1
+            if sim.now >= t_warm:
+                admitted[0] += 1
             if on_arrival is not None:
                 on_arrival(fn_name)
 
@@ -109,10 +132,13 @@ def run_open_loop(runtime: FaasdRuntime, fn_name: str, rate_rps: float,
     return {
         "offered_rps": rate_rps,
         "achieved_rps": ach,
+        "completion_rps": _completion_rps(done_in_window, t0 + warmup_s,
+                                          t0 + duration_s),
+        "completed_frac": len(done_in_window) / max(1, admitted[0]),
         "median_ms": summary.median_ms,
         "p99_ms": summary.p99_ms,
         "n": summary.n,
-        "rejected": runtime.rejected,
+        "rejected": runtime.rejected - rejected0,
     }
 
 
@@ -289,7 +315,10 @@ def run_mixed_open_loop(runtime: FaasdRuntime, fn_names: Sequence[str],
     rel_times = arrivals.times(sim.rng, duration_s)
     picks = sim.rng.choice(len(fn_names), size=len(rel_times), p=w)
     outstanding = [0]
+    admitted = [0]                  # admitted past-warmup arrivals (the
+    # completed_frac denominator; see run_open_loop)
     rejected0 = runtime.rejected
+    warmup_s = warmup_frac * duration_s
 
     def driver():
         for rel_t, pick in zip(rel_times, picks):
@@ -298,6 +327,8 @@ def run_mixed_open_loop(runtime: FaasdRuntime, fn_names: Sequence[str],
                 runtime.rejected += 1
                 continue
             outstanding[0] += 1
+            if rel_t >= warmup_s:
+                admitted[0] += 1
             if on_arrival is not None:
                 on_arrival(fn_names[pick])
 
@@ -312,7 +343,6 @@ def run_mixed_open_loop(runtime: FaasdRuntime, fn_names: Sequence[str],
     start_idx = len(runtime.records)
     sim.process(driver())
     sim.run(until=t0 + duration_s + drain_s)
-    warmup_s = warmup_frac * duration_s
     recs = [r for r in runtime.records[start_idx:]
             if r.t_arrival >= t0 + warmup_s]
     done = [r for r in recs if r.t_done <= t0 + duration_s + drain_s]
@@ -325,6 +355,9 @@ def run_mixed_open_loop(runtime: FaasdRuntime, fn_names: Sequence[str],
     return {
         "offered_rps": len(rel_times) / max(duration_s, 1e-9),
         "achieved_rps": len(done) / max(1e-9, duration_s - warmup_s),
+        "completion_rps": _completion_rps(done, t0 + warmup_s,
+                                          t0 + duration_s),
+        "completed_frac": len(done) / max(1, admitted[0]),
         "median_ms": summary.median_ms,
         "p99_ms": summary.p99_ms,
         "mean_ms": summary.mean_ms,
@@ -336,6 +369,37 @@ def run_mixed_open_loop(runtime: FaasdRuntime, fn_names: Sequence[str],
     }
 
 
+def _row_rate(row: Dict[str, float], rate_key: str) -> float:
+    """A row's offered rate: the nominal grid/search rate when positive,
+    else the measured offered rate (trace replay fixes the rate)."""
+    return float(row.get(rate_key) or row["offered_rps"])
+
+
+def _row_meets_slo(row: Dict[str, float], rate: float, slo_p99_ms: float,
+                   min_achieved_frac: float) -> bool:
+    p99 = float(row["p99_ms"])
+    return (math.isfinite(p99) and p99 <= slo_p99_ms
+            and row.get("rejected", 0) == 0
+            and row["achieved_rps"] >= min_achieved_frac * rate)
+
+
+def knee_index_of_curve(curve: List[Dict[str, float]], slo_p99_ms: float,
+                        min_achieved_frac: float = 0.85,
+                        rate_key: str = "nominal_rps") -> Optional[int]:
+    """Index of the knee row (highest rate meeting the SLO criteria), or
+    ``None`` when no row qualifies.  Callers wanting the knee's latency
+    row should use this index instead of re-matching the returned rate by
+    float equality — search-generated rates are not grid-aligned."""
+    best_idx: Optional[int] = None
+    best = 0.0
+    for i, r in enumerate(curve):
+        rate = _row_rate(r, rate_key)
+        if _row_meets_slo(r, rate, slo_p99_ms, min_achieved_frac) \
+                and rate >= best:
+            best, best_idx = rate, i
+    return best_idx
+
+
 def knee_of_curve(curve: List[Dict[str, float]], slo_p99_ms: float,
                   min_achieved_frac: float = 0.85,
                   rate_key: str = "nominal_rps") -> float:
@@ -345,13 +409,215 @@ def knee_of_curve(curve: List[Dict[str, float]], slo_p99_ms: float,
     Rows without a positive nominal rate (e.g. trace replay, where the
     trace fixes the rate) fall back to the measured offered rate so the
     achieved-fraction check still binds."""
-    best = 0.0
-    for r in curve:
-        rate = float(r.get(rate_key) or r["offered_rps"])
-        if (r["p99_ms"] <= slo_p99_ms and r.get("rejected", 0) == 0
-                and r["achieved_rps"] >= min_achieved_frac * rate):
-            best = max(best, rate)
-    return best
+    idx = knee_index_of_curve(curve, slo_p99_ms, min_achieved_frac, rate_key)
+    return 0.0 if idx is None else _row_rate(curve[idx], rate_key)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive SLO-knee search.
+#
+# Fixed rate grids spend most of their samples on the flat part of the
+# throughput-latency curve; the interesting behaviour lives in a narrow
+# band at the capacity cliff (FaaSNet, Quark).  KneeSearch spends samples
+# there instead: a coarse exponential bracketing pass finds a [pass, fail]
+# rate bracket, then geometric bisection narrows it to a relative-width
+# tolerance.  Failing probes feed back their *achieved* throughput as a
+# capacity ceiling (an overloaded run completes work at roughly the
+# service capacity, and the SLO knee cannot exceed it), which collapses
+# the bracket in one probe even when the initial guess is far off — so a
+# new backend needs zero hand-measured grid entries.
+
+
+@dataclasses.dataclass
+class KneeSearchResult:
+    """Outcome of one :class:`KneeSearch` run.
+
+    ``knee_rps`` is the highest probed rate that met the SLO criteria
+    (0.0 when nothing was sustainable); ``[lo_rps, hi_rps]`` is the final
+    bracket; ``trace`` records every probe in issue order (rate, phase,
+    verdict, and the probe's measured row) — the artifact's audit trail
+    for how the knee was located."""
+    knee_rps: float
+    lo_rps: float
+    hi_rps: float
+    n_probes: int
+    converged: bool
+    trace: List[Dict[str, object]]
+
+    def knee_trace_index(self) -> Optional[int]:
+        """Index (into ``trace``/``rows``) of the knee probe: the highest
+        passing *full-resolution* probe — a passing low-res bracket probe
+        under-samples the tail and never certifies the knee."""
+        best_idx, best = None, 0.0
+        for i, t in enumerate(self.trace):
+            if (t["ok"] and t["phase"] == "bisect"
+                    and float(t["rate_rps"]) >= best):
+                best, best_idx = float(t["rate_rps"]), i
+        return best_idx
+
+
+class KneeSearch:
+    """Adaptive SLO-knee locator over an open-loop probe function.
+
+    ``probe(rate_rps, phase)`` runs one open-loop experiment at the given
+    offered rate and returns its result row (needs ``p99_ms``,
+    ``achieved_rps``, ``rejected``); ``phase`` is ``"bracket"`` or
+    ``"bisect"`` so callers can run bracketing probes at lower resolution
+    (shorter duration).  The search is deterministic given a
+    deterministic probe.
+
+    ``max_probes`` is a hard sample budget: the search never issues more
+    open-loop runs than that, returning the best bracket found so far
+    with ``converged=False`` when the budget ran out first.
+    """
+
+    def __init__(self, probe: Callable[[float, str], Dict[str, object]],
+                 slo_p99_ms: float, rate0: float = 500.0,
+                 growth: float = 2.0, shrink: float = 0.75,
+                 rel_tol: float = 0.10, max_probes: int = 12,
+                 min_achieved_frac: float = 0.85,
+                 min_completed_frac: float = 0.95,
+                 rate_floor: float = 25.0, rate_ceiling: float = 64000.0):
+        if growth <= 1.0:
+            raise ValueError(f"growth must be > 1, got {growth}")
+        if not 0.0 < shrink < 1.0:
+            raise ValueError(f"shrink must be in (0, 1), got {shrink}")
+        if rel_tol <= 0.0:
+            raise ValueError(f"rel_tol must be positive, got {rel_tol}")
+        if max_probes < 1:
+            raise ValueError(f"max_probes must be >= 1, got {max_probes}")
+        if not 0.0 < rate_floor <= rate_ceiling:
+            raise ValueError(f"need 0 < rate_floor <= rate_ceiling, got "
+                             f"[{rate_floor}, {rate_ceiling}]")
+        self.probe = probe
+        self.slo_p99_ms = slo_p99_ms
+        self.rate0 = rate0
+        self.growth = growth
+        self.shrink = shrink
+        self.rel_tol = rel_tol
+        self.max_probes = max_probes
+        self.min_achieved_frac = min_achieved_frac
+        self.min_completed_frac = min_completed_frac
+        self.rate_floor = rate_floor
+        self.rate_ceiling = rate_ceiling
+
+    def _clamp(self, rate: float) -> float:
+        return min(max(rate, self.rate_floor), self.rate_ceiling)
+
+    def _ok(self, row: Dict[str, object], rate: float) -> bool:
+        """Probe verdict.  Prefers the *completed fraction* (did the work
+        admitted during the run finish within the drain window?) over the
+        grid criterion's achieved-vs-nominal ratio: the latter compares a
+        completion count against the nominal rate, so at short probe
+        durations Poisson arrival-count noise alone can flip it."""
+        frac = row.get("completed_frac")
+        if frac is None:
+            return _row_meets_slo(row, rate, self.slo_p99_ms,
+                                  self.min_achieved_frac)
+        p99 = float(row["p99_ms"])
+        return (math.isfinite(p99) and p99 <= self.slo_p99_ms
+                and row.get("rejected", 0) == 0
+                and float(frac) >= self.min_completed_frac)
+
+    def _probe(self, rate: float, phase: str,
+               trace: List[Dict[str, object]]) -> bool:
+        row = self.probe(rate, phase)
+        ok = self._ok(row, rate)
+        trace.append({"rate_rps": float(rate), "phase": phase, "ok": ok,
+                      "p99_ms": float(row.get("p99_ms", float("nan"))),
+                      "achieved_rps": float(row.get("achieved_rps", 0.0)),
+                      "completion_rps": float(
+                          row.get("completion_rps",
+                                  row.get("achieved_rps", 0.0))),
+                      "row": row})
+        return ok
+
+    def _descend(self, rate: float, trace_entry: Dict[str, object]) -> float:
+        """Next (lower) rate after a failing probe at ``rate``.  The
+        failing run's busy-span completion rate hints at the capacity,
+        which can collapse the walk in one step when the guess was far
+        off — but under *deep* overload this runtime's throughput itself
+        collapses, so the hint is never trusted below a plain geometric
+        ``rate / growth`` step."""
+        cap = trace_entry["completion_rps"]
+        hint = self.shrink * cap if math.isfinite(cap) and cap > 0 else 0.0
+        return self._clamp(max(hint, rate / self.growth))
+
+    def run(self) -> KneeSearchResult:
+        trace: List[Dict[str, object]] = []
+        lo = 0.0                    # highest FULL-resolution rate that
+        #                             met the SLO — only such a probe may
+        #                             certify the knee
+        hi: Optional[float] = None  # lowest rate actually probed-and-failed
+        plo: Optional[float] = None  # provisional low-res pass (guidance)
+        rate = self._clamp(self.rate0)
+        # -- bracket: low-resolution exponential walk to a provisional
+        #    [pass, fail] straddle of the knee.  One probe is always
+        #    reserved for the full-resolution phase — only that phase can
+        #    certify a knee, so a bracket walk that eats the whole budget
+        #    would guarantee an empty result (a budget of 1 skips
+        #    bracketing entirely and spends its one probe at rate0).
+        bracket_budget = self.max_probes - 1
+        while len(trace) < bracket_budget:
+            if self._probe(rate, "bracket", trace):
+                plo = max(plo or 0.0, rate)
+                if hi is not None or rate >= self.rate_ceiling:
+                    break
+                rate = self._clamp(rate * self.growth)
+            else:
+                hi = rate if hi is None else min(hi, rate)
+                if plo is not None:
+                    break                           # bracketed
+                if hi <= self.rate_floor:
+                    break                           # nothing sustainable
+                nxt = self._descend(rate, trace[-1])
+                if nxt >= rate:                     # floor-pinned: re-probing
+                    break                           # the same rate is futile
+                rate = nxt
+        # -- bisect: full-resolution probes, starting by confirming the
+        #    provisional pass (a short bracket probe under-samples the
+        #    tail and must never certify the knee itself); when nothing
+        #    passed at low resolution, descend from the failing bound
+        if plo is not None:
+            next_rate = plo
+        elif hi is not None and hi > self.rate_floor and trace:
+            next_rate = self._descend(rate, trace[-1])
+        elif not trace:
+            next_rate = rate        # budget of 1: single full-res probe
+        else:
+            next_rate = None
+        while next_rate is not None and len(trace) < self.max_probes:
+            rate = next_rate
+            if self._probe(rate, "bisect", trace):
+                lo = max(lo, rate)
+                if hi is None:
+                    break                           # sustainable at ceiling
+            else:
+                hi = rate if hi is None else min(hi, rate)
+            if hi is None:
+                break
+            if lo > 0.0:
+                if (hi - lo) / hi <= self.rel_tol:
+                    break                           # bracket narrow enough
+                next_rate = math.sqrt(lo * hi)
+            else:
+                if hi <= self.rate_floor:
+                    break                           # nothing sustainable
+                nxt = self._descend(rate, trace[-1])
+                if nxt >= rate:
+                    break
+                next_rate = nxt
+        if hi is None:
+            # no failing bound was ever found: the knee is only a lower
+            # bound — converged solely when the ceiling itself sustained
+            converged = lo >= self.rate_ceiling
+            hi = lo if lo > 0.0 else self._clamp(self.rate0)
+        else:
+            converged = (lo > 0.0 and hi >= lo
+                         and (hi - lo) / max(hi, 1e-9) <= self.rel_tol)
+        return KneeSearchResult(knee_rps=lo, lo_rps=lo, hi_rps=hi,
+                                converged=converged, n_probes=len(trace),
+                                trace=trace)
 
 
 def sustainable_throughput(backend: str, fn: Optional[FunctionSpec] = None,

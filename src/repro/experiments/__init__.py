@@ -9,14 +9,14 @@ from repro.experiments.runner import ExperimentRunner
 from repro.experiments.scenario import (DEFAULT_BACKENDS,
                                         DEFAULT_CLAIMS_PAIR, ArrivalSpec,
                                         AutoscalerSpec, FunctionProfile,
-                                        Scenario, zipf_mix)
+                                        Scenario, SearchSpec, zipf_mix)
 from repro.experiments.suites import (SMOKE_DURATION_SCALE, SUITES,
                                       build_scenarios, get_scenario,
                                       get_suite)
 
 __all__ = [
     "ArrivalSpec", "AutoscalerSpec", "FunctionProfile", "Scenario",
-    "zipf_mix",
+    "SearchSpec", "zipf_mix",
     "DEFAULT_BACKENDS", "DEFAULT_CLAIMS_PAIR",
     "ExperimentRunner",
     "build_artifact", "latency_histogram", "metric_row", "metrics_csv",

@@ -24,8 +24,14 @@ import numpy as np
 # the keys regression tooling reads.  Older artifacts (v1/v2, the
 # trendline baseline case) still validate: version-specific keys are
 # required only when the document declares that schema_version.
-SCHEMA_VERSION = 3
-_SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3)
+# v4: adaptive knee search — an open-mode per-backend result may carry a
+# ``search`` block (the spec the search ran with, total probe count,
+# per-seed knees, converged flag, and the recorded per-seed probe
+# traces); grid-mode results carry none.  Either way the representative
+# latency row is tracked by index (``knee_row``), never by re-matching
+# the knee rate by float equality.
+SCHEMA_VERSION = 4
+_SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3, 4)
 
 _REQUIRED_TOP = ("schema_version", "suite", "duration_scale", "scenarios",
                  "metrics", "failures", "meta")
@@ -34,6 +40,8 @@ _REQUIRED_SCENARIO_V2 = _REQUIRED_SCENARIO_V1 + ("backend_set",)
 _REQUIRED_METRIC = ("name", "value", "derived")
 _REQUIRED_AUTOSCALER = ("policy", "n_scale_events", "cold_starts",
                         "cold_path_arrivals", "reaction_p50_ms")
+_REQUIRED_SEARCH = ("spec", "n_probes", "knee_rps_per_seed", "converged",
+                    "trace")
 
 
 def latency_histogram(lat_ms: Sequence[float], n_bins: int = 24) -> Dict[str, list]:
@@ -105,7 +113,7 @@ def validate_artifact(doc: Dict[str, object]) -> None:
                                         "must be an object")
                         continue
                     asc = res.get("autoscaler")
-                    if version == 3 and asc is not None:
+                    if version in (3, 4) and asc is not None:
                         if not isinstance(asc, dict):
                             problems.append(f"scenarios[{i}].backends[{b}]"
                                             ".autoscaler must be an object")
@@ -115,6 +123,17 @@ def validate_artifact(doc: Dict[str, object]) -> None:
                                     problems.append(
                                         f"scenarios[{i}].backends[{b}]"
                                         f".autoscaler missing {key!r}")
+                    search = res.get("search")
+                    if version == 4 and search is not None:
+                        if not isinstance(search, dict):
+                            problems.append(f"scenarios[{i}].backends[{b}]"
+                                            ".search must be an object")
+                        else:
+                            for key in _REQUIRED_SEARCH:
+                                if key not in search:
+                                    problems.append(
+                                        f"scenarios[{i}].backends[{b}]"
+                                        f".search missing {key!r}")
             else:
                 problems.append(f"scenarios[{i}].backends must be an object")
             backend_set = sc.get("backend_set")

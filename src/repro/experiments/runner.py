@@ -9,6 +9,7 @@ runner itself only schedules work and reduces results into the artifact
 from __future__ import annotations
 
 import dataclasses
+import math
 import multiprocessing
 import time
 import traceback
@@ -19,12 +20,14 @@ import numpy as np
 from repro.core.autoscaler import Autoscaler
 from repro.core.faas import FaasdRuntime, FunctionSpec
 from repro.core.simulator import Simulator
-from repro.core.workload import (LatencySummary, heavy_tailed_work,
+from repro.core.workload import (KneeSearch, LatencySummary,
+                                 heavy_tailed_work, knee_index_of_curve,
                                  knee_of_curve, percentile,
                                  run_mixed_open_loop, run_sequential)
 from repro.experiments.artifacts import (build_artifact, latency_histogram,
                                          metric_row)
-from repro.experiments.scenario import FunctionProfile, Scenario
+from repro.experiments.scenario import (FunctionProfile, Scenario,
+                                        SearchSpec)
 
 PAPER_FIG5 = {"e2e_median": 37.33, "e2e_p99": 63.42,
               "exec_median": 35.3, "exec_p99": 81.0}
@@ -57,6 +60,13 @@ def _mean(xs: Sequence[float]) -> float:
     return float(np.mean(xs)) if len(xs) else float("nan")
 
 
+def _finite_mean(xs: Sequence[float]) -> float:
+    """Mean over the finite values only (NaN when none are): one seed
+    with an undefined sample must not poison the pooled statistic."""
+    finite = [x for x in xs if math.isfinite(x)]
+    return float(np.mean(finite)) if finite else float("nan")
+
+
 def _storm_spec(sc: Scenario, i: int) -> FunctionSpec:
     """Spec for the i-th function of a provisioning storm; every storm
     wave (first deploys, redeploys, mixed-mode storms) must build the
@@ -79,8 +89,12 @@ def _make_autoscaler(sc: Scenario, rt: FaasdRuntime) -> Optional[Autoscaler]:
 def _pool_autoscaler(runs: List[Dict[str, object]]) -> Dict[str, object]:
     """Reduce per-run Autoscaler.telemetry() dicts into the artifact's
     ``autoscaler`` block: counters summed, reaction times pooled into
-    percentiles, the first run's replica timeline kept as representative."""
+    percentiles, the first *eventful* run's replica timeline kept as
+    representative (a search's opening bracket probe can be too short to
+    trigger any scale event)."""
     reactions = [x for t in runs for x in t["reactions_ms"]]
+    timeline = next((t["timeline"] for t in runs if t["timeline"]),
+                    runs[0]["timeline"])
     return {
         "policy": runs[0]["policy"],
         "n_runs": len(runs),
@@ -95,7 +109,7 @@ def _pool_autoscaler(runs: List[Dict[str, object]]) -> Dict[str, object]:
         "reaction_p99_ms": percentile(reactions, 99),
         "reaction_mean_ms": _mean(reactions),
         "reactions_ms": reactions[:500],
-        "timeline": runs[0]["timeline"][:200],
+        "timeline": timeline[:200],
     }
 
 
@@ -137,41 +151,187 @@ def _exec_closed(sc: Scenario, backend: str, duration_scale: float,
     }
 
 
+def _open_loop_run(sc: Scenario, backend: str, seed: int, rate: float,
+                   duration: float,
+                   asc_runs: List[Dict[str, object]],
+                   ) -> Tuple[Dict[str, object], List[float]]:
+    """One fresh-runtime open-loop run (open-loop correctness: queueing
+    state never leaks across rates); returns the result row and its
+    latency samples, appending autoscaler telemetry to ``asc_runs``."""
+    sim = Simulator(seed=seed)
+    rt = FaasdRuntime(sim, backend=backend, n_cores=sc.n_cores)
+    _deploy_mix(rt, sc.functions)
+    asc = _make_autoscaler(sc, rt)
+    res = run_mixed_open_loop(
+        rt, sc.fn_names(), sc.weights(), sc.arrival.build(rate),
+        duration_s=duration, warmup_frac=sc.warmup_frac,
+        on_arrival=asc.on_arrival if asc else None,
+        on_done=asc.on_done if asc else None)
+    lats = res.pop("latencies_ms")
+    res.pop("per_fn")
+    if asc is not None:
+        t = asc.telemetry()
+        res["scale_events"] = int(t["n_scale_events"])
+        res["cold_path_arrivals"] = int(t["cold_path_arrivals"])
+        asc_runs.append(t)
+    return res, lats
+
+
+def _assemble_open(sc: Scenario, duration: float,
+                   curve: List[Dict[str, object]],
+                   pooled: List[List[float]], knee: float,
+                   rep_idx: Optional[int],
+                   asc_runs: List[Dict[str, object]]) -> Dict[str, object]:
+    """Common tail of the open-mode executors: representative latency row
+    (tracked by *index* — search-generated rates are not grid-aligned, so
+    re-matching the knee rate by float equality silently misses) and the
+    artifact's per-backend block."""
+    if rep_idx is None and curve:
+        # no knee anywhere: fall back to the lowest offered rate so
+        # over-SLO smoke runs still record latencies — preferring
+        # full-resolution rows (a low-res bracket probe under-samples
+        # the tail and must not become the headline latency row when a
+        # full-duration row at the same rate exists)
+        candidates = [i for i, r in enumerate(curve)
+                      if r.get("phase") != "bracket"] \
+            or list(range(len(curve)))
+        rep_idx = min(candidates, key=lambda i: curve[i]["nominal_rps"])
+    rep = curve[rep_idx] if rep_idx is not None else None
+    out = {
+        "mode": "open",
+        "duration_s": duration,
+        "arrival_kind": sc.arrival.kind,
+        "slo_p99_ms": sc.slo_p99_ms,
+        "curve": curve,
+        "knee_rps": knee,
+        "knee_row": rep_idx,
+        "median_ms": rep["median_ms"] if rep else float("nan"),
+        "p99_ms": rep["p99_ms"] if rep else float("nan"),
+        "n": int(sum(r["n"] for r in curve)),
+        "hist": latency_histogram(pooled[rep_idx]
+                                  if rep_idx is not None else []),
+    }
+    if asc_runs:
+        out["autoscaler"] = _pool_autoscaler(asc_runs)
+    return out
+
+
+def _calibrated_rate0(sc: Scenario, backend: str, seed: int,
+                      spec: SearchSpec) -> float:
+    """Initial bracket rate from a cheap closed-loop warm measurement:
+    roughly half the worker's aggregate service rate.  A rough guess is
+    all the search needs — failing probes feed their achieved throughput
+    back into the bracket as a capacity ceiling."""
+    sim = Simulator(seed=seed)
+    rt = FaasdRuntime(sim, backend=backend, n_cores=sc.n_cores)
+    _deploy_mix(rt, sc.functions)
+    s = run_sequential(rt, sc.functions[0].name, n=16)
+    if not math.isfinite(s.median_ms) or s.median_ms <= 0:
+        return min(max(500.0, spec.rate_floor), spec.rate_ceiling)
+    est = 0.5 * sc.n_cores * 1e3 / s.median_ms
+    return min(max(est, spec.rate_floor), spec.rate_ceiling)
+
+
+def _exec_open_search(sc: Scenario, backend: str, duration: float,
+                      smoke: bool, spec: SearchSpec) -> Dict[str, object]:
+    """Adaptive knee search per (backend, seed): bracketing probes run at
+    ``bracket_duration_frac`` resolution, bisection probes at full
+    scenario duration; per-seed knees are pooled into ``knee_rps`` and
+    every probe lands in the curve + search trace."""
+    tol = spec.rel_tol_for(smoke)
+    budget = spec.max_probes_for(smoke)
+    curve: List[Dict[str, object]] = []
+    pooled: List[List[float]] = []
+    asc_runs: List[Dict[str, object]] = []
+    seed_traces: List[Dict[str, object]] = []
+    knees: List[float] = []
+    rep_idx: Optional[int] = None
+    for seed in _seeds(sc, smoke):
+        rate0 = spec.rate0 if spec.rate0 is not None else \
+            _calibrated_rate0(sc, backend, seed, spec)
+        rate0 *= spec.rate0_frac
+        base_idx = len(curve)
+
+        def probe(rate: float, phase: str, seed=seed) -> Dict[str, object]:
+            frac = spec.bracket_duration_frac if phase == "bracket" else 1.0
+            d = max(0.2, duration * frac)
+            res, lats = _open_loop_run(sc, backend, seed, rate, d, asc_runs)
+            row = {"nominal_rps": float(rate), "seed": seed,
+                   "phase": phase, "duration_s": round(d, 4), **res}
+            curve.append(row)
+            pooled.append(lats)
+            return row
+
+        result = KneeSearch(
+            probe, sc.slo_p99_ms, rate0=rate0, growth=spec.growth,
+            shrink=spec.shrink, rel_tol=tol, max_probes=budget,
+            rate_floor=spec.rate_floor,
+            rate_ceiling=spec.rate_ceiling).run()
+        knees.append(result.knee_rps)
+        ti = result.knee_trace_index()
+        if rep_idx is None and ti is not None:
+            rep_idx = base_idx + ti
+        seed_traces.append({
+            "seed": seed,
+            "rate0": round(rate0, 3),
+            "knee_rps": result.knee_rps,
+            "lo_rps": result.lo_rps,
+            "hi_rps": result.hi_rps,
+            "n_probes": result.n_probes,
+            "converged": result.converged,
+            "probes": [{k: t[k] for k in ("rate_rps", "phase", "ok",
+                                          "p99_ms", "achieved_rps",
+                                          "completion_rps")}
+                       for t in result.trace],
+        })
+    out = _assemble_open(sc, duration, curve, pooled,
+                         knee=_mean(knees) if knees else 0.0,
+                         rep_idx=rep_idx, asc_runs=asc_runs)
+    out["search"] = {
+        "spec": {"rate0": spec.rate0, "rate0_frac": spec.rate0_frac,
+                 "growth": spec.growth,
+                 "shrink": spec.shrink, "rel_tol": tol,
+                 "max_probes": budget,
+                 "bracket_duration_frac": spec.bracket_duration_frac,
+                 "rate_floor": spec.rate_floor,
+                 "rate_ceiling": spec.rate_ceiling},
+        "n_probes": int(sum(t["n_probes"] for t in seed_traces)),
+        "knee_rps_per_seed": knees,
+        "converged": all(t["converged"] for t in seed_traces),
+        "trace": seed_traces,
+    }
+    return out
+
+
 def _exec_open(sc: Scenario, backend: str, duration_scale: float,
                smoke: bool) -> Dict[str, object]:
     duration = max(0.3, sc.duration_s * duration_scale)
+    spec = sc.search_spec()
+    if spec is not None:
+        return _exec_open_search(sc, backend, duration, smoke, spec)
     rates = sc.rates_for(backend, smoke=smoke)
     if not rates:
         # fail the cell loudly instead of emitting a zero-sample result
         # whose NaN medians would poison the JSON artifact
         raise ValueError(
             f"scenario {sc.name!r} has no rate grid for backend "
-            f"{backend!r}; add rates[{backend!r}] or a '*' fallback")
+            f"{backend!r}; add rates[{backend!r}], a '*' fallback, or "
+            f"drop the grids to use the adaptive knee search")
     curve: List[Dict[str, object]] = []
-    pooled_by_rate: Dict[float, List[float]] = {}
+    pooled: List[List[float]] = []
     asc_runs: List[Dict[str, object]] = []
     for rate in rates:
         per_seed: List[Dict[str, object]] = []
         lats: List[float] = []
         row_telemetry: List[Dict[str, object]] = []
         for seed in _seeds(sc, smoke):
-            sim = Simulator(seed=seed)
-            rt = FaasdRuntime(sim, backend=backend, n_cores=sc.n_cores)
-            _deploy_mix(rt, sc.functions)
-            asc = _make_autoscaler(sc, rt)
-            res = run_mixed_open_loop(
-                rt, sc.fn_names(), sc.weights(), sc.arrival.build(rate),
-                duration_s=duration, warmup_frac=sc.warmup_frac,
-                on_arrival=asc.on_arrival if asc else None,
-                on_done=asc.on_done if asc else None)
-            lats.extend(res.pop("latencies_ms"))
-            res.pop("per_fn")
+            res, run_lats = _open_loop_run(sc, backend, seed, rate,
+                                           duration, row_telemetry)
+            lats.extend(run_lats)
             per_seed.append(res)
-            if asc is not None:
-                row_telemetry.append(asc.telemetry())
         row = {"nominal_rps": float(rate)}
-        for key in ("offered_rps", "achieved_rps", "median_ms", "p99_ms",
-                    "mean_ms", "p999_ms"):
+        for key in ("offered_rps", "achieved_rps", "completion_rps",
+                    "median_ms", "p99_ms", "mean_ms", "p999_ms"):
             row[key] = _mean([r[key] for r in per_seed])
         row["n"] = int(sum(r["n"] for r in per_seed))
         row["rejected"] = int(sum(r["rejected"] for r in per_seed))
@@ -182,29 +342,11 @@ def _exec_open(sc: Scenario, backend: str, duration_scale: float,
                                                 for t in row_telemetry))
             asc_runs.extend(row_telemetry)
         curve.append(row)
-        pooled_by_rate[float(rate)] = lats
-    knee = knee_of_curve(curve, sc.slo_p99_ms)
-    # representative latency point: the knee when one exists, else the
-    # lowest offered rate (so over-SLO smoke runs still record latencies)
-    rep = next((r for r in curve if r["nominal_rps"] == knee), None)
-    if rep is None and curve:
-        rep = min(curve, key=lambda r: r["nominal_rps"])
-    out = {
-        "mode": "open",
-        "duration_s": duration,
-        "arrival_kind": sc.arrival.kind,
-        "slo_p99_ms": sc.slo_p99_ms,
-        "curve": curve,
-        "knee_rps": knee,
-        "median_ms": rep["median_ms"] if rep else float("nan"),
-        "p99_ms": rep["p99_ms"] if rep else float("nan"),
-        "n": int(sum(r["n"] for r in curve)),
-        "hist": latency_histogram(
-            pooled_by_rate.get(rep["nominal_rps"], []) if rep else []),
-    }
-    if asc_runs:
-        out["autoscaler"] = _pool_autoscaler(asc_runs)
-    return out
+        pooled.append(lats)
+    return _assemble_open(sc, duration, curve, pooled,
+                          knee=knee_of_curve(curve, sc.slo_p99_ms),
+                          rep_idx=knee_index_of_curve(curve, sc.slo_p99_ms),
+                          asc_runs=asc_runs)
 
 
 def _exec_storm(sc: Scenario, backend: str, duration_scale: float,
@@ -348,13 +490,21 @@ def _exec_mixed(sc: Scenario, backend: str, duration_scale: float,
         s = LatencySummary.of(lat)
         p99_before = percentile(before, 99)
         p99_during = percentile(during, 99)
+        # short smoke runs can leave the pre-storm warm window [warmup,
+        # storm_t) empty: the percentiles come back NaN (or zero), and an
+        # unguarded division would ship a NaN that poisons compare.py
+        # baselines — flag the seed instead
+        warm_ok = (math.isfinite(p99_before) and p99_before > 0
+                   and math.isfinite(p99_during))
         per_seed.append({
             "n": s.n, "median_ms": s.median_ms, "p99_ms": s.p99_ms,
             "warm_median_before_ms": percentile(before, 50),
             "warm_median_during_ms": percentile(during, 50),
             "warm_p99_before_ms": p99_before,
             "warm_p99_during_ms": p99_during,
-            "warm_p99_inflation": p99_during / p99_before,
+            "warm_p99_inflation": (p99_during / p99_before) if warm_ok
+            else float("nan"),
+            "insufficient_warm_samples": not warm_ok,
         })
     out: Dict[str, object] = {
         "mode": "mixed",
@@ -368,10 +518,14 @@ def _exec_mixed(sc: Scenario, backend: str, duration_scale: float,
         "storm_total_median_ms": LatencySummary.of(storm_total_ms).median_ms,
         "hist": latency_histogram(warm_lats_pooled),
     }
-    for key in ("median_ms", "p99_ms", "warm_median_before_ms",
-                "warm_median_during_ms", "warm_p99_before_ms",
-                "warm_p99_during_ms", "warm_p99_inflation"):
+    for key in ("median_ms", "p99_ms"):
         out[key] = _mean([r[key] for r in per_seed])
+    for key in ("warm_median_before_ms", "warm_median_during_ms",
+                "warm_p99_before_ms", "warm_p99_during_ms",
+                "warm_p99_inflation"):
+        out[key] = _finite_mean([r[key] for r in per_seed])
+    out["insufficient_warm_samples"] = int(sum(
+        r["insufficient_warm_samples"] for r in per_seed))
     if asc_runs:
         out["autoscaler"] = _pool_autoscaler(asc_runs)
     return out
@@ -425,12 +579,26 @@ def _fig6_claims(base: dict, treat: dict) -> Dict[str, dict]:
             "measured": round(ratio, 2), "paper": PAPER_FIG6["throughput_ratio"],
             "delta": round(ratio - PAPER_FIG6["throughput_ratio"], 2)},
     }
-    b_at = next((r for r in base["curve"] if r["nominal_rps"] == b_knee), None)
-    t_curve = treat["curve"]
+    # the baseline's knee row is tracked by index ("knee_row"), never by
+    # re-matching the knee rate with float equality: search-generated
+    # rates are not grid-aligned, and pooled multi-seed knees match no row
+    b_at = (base["curve"][int(base["knee_row"])]
+            if b_knee > 0 and base.get("knee_row") is not None else None)
+    # only full-resolution rows may represent the treatment: a search
+    # curve also holds short low-res bracket probes whose tails are
+    # under-sampled (grid rows carry no "phase" and all qualify)
+    t_curve = [r for r in treat["curve"] if r.get("phase") != "bracket"] \
+        or treat["curve"]
     if b_at and t_curve and b_knee > 0:
-        # latency comparison at ~1.3x the baseline's knee, as in the paper
-        t_at = min(t_curve,
-                   key=lambda r: abs(r["nominal_rps"] - b_knee * 1.3))
+        # latency comparison at ~1.3x the baseline's knee, as in the
+        # paper — taken at the nearest measured treatment rate, which
+        # the claim records since neither grids nor search probes are
+        # guaranteed to have sampled that exact load
+        target = b_knee * 1.3
+        t_at = min(t_curve, key=lambda r: abs(r["nominal_rps"] - target))
+        claims["latency_compare_rps"] = {
+            "measured": round(float(t_at["nominal_rps"]), 1),
+            "target": round(target, 1)}
         for key, short in (("median_ms", "median_speedup"),
                            ("p99_ms", "p99_speedup")):
             x = b_at[key] / t_at[key]
@@ -648,6 +816,16 @@ class ExperimentRunner:
                     metrics.append(metric_row(
                         f"scn_{sc.name}_{backend}_p99",
                         res["p99_ms"] * 1e3, f"us ({sc.mode})"))
+                if res.get("mode") == "open" and res.get("knee_rps"):
+                    # knee-0 results (SLO infeasible at this duration,
+                    # e.g. deep MMPP bursts in smoke windows) emit no row:
+                    # a later nonzero knee would otherwise diff against a
+                    # meaningless zero baseline, and a knee that *drops*
+                    # to 0 shows up as a missing-metric regression anyway
+                    metrics.append(metric_row(
+                        f"scn_{sc.name}_{backend}_knee",
+                        res["knee_rps"],
+                        f"rps at p99<={sc.slo_p99_ms:g}ms"))
                 if "autoscaler" in res:
                     metrics.append(metric_row(
                         f"scn_{sc.name}_{backend}_scaleup_reaction",
@@ -658,6 +836,16 @@ class ExperimentRunner:
                         f"scn_{sc.name}_{backend}_redeploy_speedup",
                         res["redeploy_speedup"],
                         "x first-deploy/redeploy (snapshot restore)"))
+            probes = sum(res["search"]["n_probes"]
+                         for res in backends.values() if "search" in res)
+            if probes:
+                # one row per scenario, not per backend: a benign +-1
+                # probe shift on a 2-probe cell would trip compare.py's
+                # relative threshold, while a systemic sampling-cost
+                # change still moves the scenario total past it
+                metrics.append(metric_row(
+                    f"scn_{sc.name}_search_probes", probes,
+                    "open-loop runs spent locating knees (all backends)"))
             out_scenarios.append(entry)
 
         meta = {

@@ -119,14 +119,55 @@ class AutoscalerSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class SearchSpec:
+    """Recipe for the adaptive SLO-knee search that replaces hand-sized
+    rate grids on open-mode scenarios.
+
+    The runner drives one :class:`~repro.core.workload.KneeSearch` per
+    (backend, seed): coarse exponential bracketing at low resolution
+    (``bracket_duration_frac`` of the scenario duration), then SLO-aware
+    geometric bisection until the bracket's relative width is within
+    ``rel_tol`` — all under a hard ``max_probes`` open-loop sample budget.
+    Smoke runs use the coarser ``smoke_rel_tol``/``smoke_max_probes``.
+
+    ``rate0`` seeds the bracket; ``None`` (the default) calibrates it
+    from a cheap closed-loop warm-latency measurement, so a brand-new
+    backend needs zero hand-measured rate entries.  ``rate0_frac``
+    down-scales that seed: knee-claim scenarios start near the capacity
+    estimate (fast bracketing), satellite scenarios start well under it
+    so even a two-probe smoke budget lands one comfortable-load probe
+    whose latency row is a sane representative.
+    """
+    rate0: Optional[float] = None
+    rate0_frac: float = 1.0
+    growth: float = 2.0
+    shrink: float = 0.75
+    rel_tol: float = 0.10
+    max_probes: int = 12
+    smoke_rel_tol: float = 0.15
+    smoke_max_probes: int = 8
+    bracket_duration_frac: float = 0.4
+    rate_floor: float = 25.0
+    rate_ceiling: float = 64000.0
+
+    def rel_tol_for(self, smoke: bool) -> float:
+        return self.smoke_rel_tol if smoke else self.rel_tol
+
+    def max_probes_for(self, smoke: bool) -> int:
+        return self.smoke_max_probes if smoke else self.max_probes
+
+
+@dataclasses.dataclass(frozen=True)
 class Scenario:
     """A complete experiment: mix + arrivals + duration + backend matrix.
 
     modes:
       * ``closed`` — n_requests sequential invocations per function
         (paper Fig 5 methodology); ``rates`` unused.
-      * ``open``   — open-loop sweep over ``rates[backend]`` with knee/SLO
-        detection (paper Fig 6 methodology).
+      * ``open``   — adaptive SLO-knee search per backend (the default:
+        ``search_spec()``), or an open-loop sweep over ``rates[backend]``
+        when the scenario pins explicit grids (paper Fig 6 methodology,
+        exact-reproduction runs).
       * ``storm``  — ``storm_functions`` concurrent deploy+first-invoke
         (cold-start storm; FaaSNet's provisioning regime).
       * ``mixed``  — steady warm traffic at ``rates[backend][0]`` plus a
@@ -145,6 +186,7 @@ class Scenario:
     arrival: ArrivalSpec = ArrivalSpec("poisson")
     rates: Optional[Dict[str, Tuple[float, ...]]] = None
     smoke_rates: Optional[Dict[str, Tuple[float, ...]]] = None
+    search: Optional[SearchSpec] = None
     duration_s: float = 1.0
     warmup_frac: float = 0.2
     n_requests: int = 100
@@ -159,6 +201,18 @@ class Scenario:
     claims_pair: Tuple[str, str] = DEFAULT_CLAIMS_PAIR
     claims_kind: Optional[str] = None     # "fig5" | "fig6" | "coldstart"
     tags: Tuple[str, ...] = ()
+
+    def search_spec(self) -> Optional[SearchSpec]:
+        """The effective knee-search spec, or ``None`` when this scenario
+        runs on a rate grid.
+
+        Adaptive search is the default for open-mode scenarios: a
+        scenario that pins explicit ``rates`` (exact-reproduction runs,
+        the grid-mode regression anchor) keeps the grid sweep, and
+        non-open modes never search."""
+        if self.mode != "open" or self.rates:
+            return None
+        return self.search or SearchSpec()
 
     def weights(self) -> List[float]:
         return [f.weight for f in self.functions]

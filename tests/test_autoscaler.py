@@ -298,7 +298,7 @@ def test_autoscaler_spec_builds_policies():
 
 
 def test_schema_v3_validates_autoscaler_blocks():
-    assert SCHEMA_VERSION == 3
+    assert SCHEMA_VERSION == 4
     good_block = {"policy": "lead-time", "n_scale_events": 3,
                   "cold_starts": 2, "cold_path_arrivals": 5,
                   "reaction_p50_ms": 1.5}
@@ -315,7 +315,10 @@ def test_schema_v3_validates_autoscaler_blocks():
         [], [])
     with pytest.raises(ValueError, match="autoscaler missing"):
         validate_artifact(bad)
-    # v2 documents never required the block's keys
+    # v3 documents require the block's keys too; v2 documents never did
+    bad["schema_version"] = 3
+    with pytest.raises(ValueError, match="autoscaler missing"):
+        validate_artifact(bad)
     bad["schema_version"] = 2
     validate_artifact(bad)
 

@@ -477,12 +477,16 @@ def test_runner_skips_claims_without_the_pair():
 
 
 def test_open_mode_fails_loudly_without_a_rate_grid():
-    """A backend with neither an explicit grid nor a '*' fallback must
-    fail its cell (caught in the artifact's failures) rather than emit a
-    zero-sample result with NaN medians."""
-    sc = dataclasses.replace(get_scenario("paper-fig6"),
-                             backends=("containerd", "junctiond", "quark",
-                                       "wasm", "turbo"))
+    """A *grid-mode* scenario (explicit ``rates``) run against a backend
+    with neither an explicit grid nor a '*' fallback must fail its cell
+    (caught in the artifact's failures) rather than emit a zero-sample
+    result with NaN medians.  Search-mode scenarios never hit this: any
+    backend can be searched."""
+    anchor = get_scenario("multi-tenant-mix")       # the pinned-grid anchor
+    rates = {b: g for b, g in anchor.rates.items() if b != "*"}
+    sc = dataclasses.replace(anchor, rates=rates, smoke_rates=None,
+                             backends=("containerd", "turbo"))
+    assert sc.search_spec() is None                 # still grid mode
     doc = ExperimentRunner(smoke=True).run_suite([sc], suite="unit")
     assert any(f["backend"] == "turbo" and "rate grid" in f["error"]
                for f in doc["failures"])
@@ -499,9 +503,11 @@ def test_validate_artifact_accepts_v1_and_v2_schemas():
     v2 = dict(v1, schema_version=2)
     v2["scenarios"] = [dict(v1["scenarios"][0], backend_set=["containerd"])]
     validate_artifact(v2)
-    v4 = dict(v1, schema_version=4)
+    v3 = dict(v2, schema_version=3)
+    validate_artifact(v3)
+    v5 = dict(v1, schema_version=5)
     with pytest.raises(ValueError, match="schema_version"):
-        validate_artifact(v4)
+        validate_artifact(v5)
 
 
 def test_rates_fall_back_to_wildcard_grid_with_warning():
@@ -517,9 +523,10 @@ def test_rates_fall_back_to_wildcard_grid_with_warning():
     with pytest.warns(RuntimeWarning, match="multi-tenant-mix"):
         assert sc.rates_for("some-new-backend", smoke=True) == \
             sc.smoke_rates["*"]
+    # fig6 carries no grids at all any more: the adaptive search is its
+    # default, for every backend including unregistered future ones
     fig6 = get_scenario("paper-fig6")
-    for b in SIX:                   # fig6 grids are explicit per backend
-        assert fig6.rates_for(b)
+    assert fig6.rates is None and fig6.search_spec() is not None
 
 
 def test_wildcard_only_grid_stays_silent():
@@ -533,15 +540,13 @@ def test_wildcard_only_grid_stays_silent():
             assert sc.rates_for(b) == (0.0,)
 
 
-@pytest.mark.parametrize("scenario", ["multi-tenant-mix", "bursty-burst",
-                                      "diurnal-drift", "heavy-tail-mix",
-                                      "autoscale-burst", "autoscale-diurnal",
-                                      "mixed-cold-warm"])
-def test_non_pair_backends_have_knee_sized_grids(scenario):
-    """quark/wasm/firecracker/gvisor get explicit per-scenario rate grids
-    sized to their own knees instead of riding the '*' fallback (which
-    reuses the containerd grid and often sits past quark's knee, wasting
-    sweep samples)."""
+@pytest.mark.parametrize("scenario", ["multi-tenant-mix", "mixed-cold-warm"])
+def test_grid_scenarios_keep_knee_sized_backend_grids(scenario):
+    """The two scenarios that still carry rate tables (the pinned-grid
+    regression anchor and the mixed mode's warm rate) keep explicit
+    per-backend entries sized to the measured knees instead of riding the
+    '*' fallback (which reuses the containerd grid and often sits past
+    quark's knee)."""
     sc = get_scenario(scenario)
     for b in ("quark", "wasm", "firecracker", "gvisor"):
         assert b in sc.rates, f"{scenario} missing explicit {b} grid"
@@ -556,6 +561,23 @@ def test_non_pair_backends_have_knee_sized_grids(scenario):
         assert min(sc.rates_for(b)) <= min(containerd)
     assert max(sc.rates_for("quark")) < max(containerd)
     assert max(sc.rates_for("gvisor")) <= max(sc.rates_for("firecracker"))
+
+
+@pytest.mark.parametrize("scenario", ["paper-fig6", "bursty-burst",
+                                      "diurnal-drift", "heavy-tail-mix",
+                                      "autoscale-burst", "autoscale-diurnal"])
+def test_open_scenarios_default_to_adaptive_search(scenario):
+    """Every open-mode scenario except the pinned-grid anchor dropped its
+    hand-sized six-backend grids: the adaptive knee search is the
+    default, so registering backend #7 needs zero grid measurement."""
+    sc = get_scenario(scenario)
+    assert sc.rates is None and sc.smoke_rates is None
+    spec = sc.search_spec()
+    assert spec is not None
+    assert spec.max_probes_for(smoke=True) <= spec.max_probes_for(False)
+    assert spec.rel_tol_for(smoke=True) >= spec.rel_tol_for(False)
+    # trace replay stays grid-shaped by design: the trace fixes the rate
+    assert get_scenario("trace-replay").search_spec() is None
 
 
 # ---------------------------------------------------------------------------
@@ -673,6 +695,9 @@ def test_run_list_enumerates_backends_and_scenarios(capsys):
     for b in FOUR:
         assert b in out
     assert "paper-fig6" in out and "rates[" in out
+    # --list distinguishes searched scenarios from pinned-grid ones
+    assert "load=search" in out and "load=grid" in out
+    assert "search: rel_tol=" in out
     assert "smoke" in out
 
 
