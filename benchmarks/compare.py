@@ -28,9 +28,12 @@ from typing import Dict, List, Tuple
 from repro.experiments import validate_artifact
 
 # name fragments marking metrics where larger values are better; anything
-# else (latency medians/p99s, init times) regresses when it grows
+# else (latency medians/p99s, init times) regresses when it grows.
+# "sim_throughput" is covered by the "throughput" fragment but listed
+# explicitly: it is the raw-speed gate of the event-heap driver and must
+# never silently flip direction if the fragment list is pruned.
 _HIGHER_IS_BETTER = ("ratio", "speedup", "reduction", "sustainable",
-                     "knee", "throughput", "_rps")
+                     "knee", "throughput", "sim_throughput", "_rps")
 
 THRESHOLD_DEFAULT = 0.10
 

@@ -3,7 +3,8 @@ argument in one script.
 
     PYTHONPATH=src python examples/faas_comparison.py
 """
-from repro.core import FaasdRuntime, FunctionSpec, Simulator, run_open_loop
+from repro.core import (FaasdRuntime, FunctionSpec, LoadSpec, Simulator,
+                        drive)
 
 print("open-loop load sweep (AES 600B), p99 vs offered rps:\n")
 print(f"{'rate':>8} | {'containerd p99 (ms)':>20} | {'junctiond p99 (ms)':>19}")
@@ -13,7 +14,7 @@ for rate in (500, 1000, 1500, 4000, 8000, 12000):
         sim = Simulator(seed=3)
         rt = FaasdRuntime(sim, backend=backend)
         rt.deploy_blocking(FunctionSpec(name="aes", max_cores=8))
-        res = run_open_loop(rt, "aes", rate_rps=rate, duration_s=1.0)
+        res = drive(rt, LoadSpec.single("aes", rate, duration_s=1.0))
         val = res["p99_ms"]
         row.append(f"{val:20.2f}" if val == val else f"{'collapsed':>20}")
     print(" | ".join(row))

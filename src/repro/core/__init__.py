@@ -12,7 +12,8 @@ from repro.core.backends import (ColdStartModel, ExecutionBackend,
                                  get_backend_class, register_backend,
                                  resolve_backend)
 from repro.core.containerd import Containerd
-from repro.core.faas import FaasdRuntime, FunctionSpec, InvocationRecord
+from repro.core.faas import (FaasdRuntime, FunctionSpec, InvocationPlan,
+                             InvocationRecord)
 from repro.core.firecracker import Firecracker, SnapshotCache
 from repro.core.gvisor import GVisor
 from repro.core.junction import JunctionInstance, UProc
@@ -22,15 +23,15 @@ from repro.core.wasm import WasmSandbox
 from repro.core.netstack import NetStack
 from repro.core.resources import CorePool
 from repro.core.scheduler import JunctionScheduler, PollingModel
-from repro.core.simulator import Event, Process, Queue, Simulator
+from repro.core.simulator import Event, EventLoop, Process, Queue, Simulator
 from repro.core.workload import (ArrivalProcess, BurstyArrivals,
                                  DiurnalArrivals, KneeSearch,
-                                 KneeSearchResult, LatencySummary,
-                                 PoissonArrivals, TraceReplay,
-                                 heavy_tailed_work, knee_index_of_curve,
-                                 knee_of_curve, run_mixed_open_loop,
-                                 run_open_loop, run_sequential,
-                                 sustainable_throughput)
+                                 KneeSearchResult, LatencySummary, LoadSpec,
+                                 NullObserver, PoissonArrivals, SimObserver,
+                                 TraceReplay, drive, heavy_tailed_work,
+                                 knee_index_of_curve, knee_of_curve,
+                                 run_mixed_open_loop, run_open_loop,
+                                 run_sequential, sustainable_throughput)
 
 __all__ = [
     "Autoscaler", "ScalePolicy", "QueueDepthPolicy", "LeadTimePolicy",
@@ -39,12 +40,15 @@ __all__ = [
     "UnknownFunctionError",
     "available_backends", "get_backend_class", "register_backend",
     "resolve_backend",
-    "Containerd", "FaasdRuntime", "FunctionSpec", "InvocationRecord",
+    "Containerd", "FaasdRuntime", "FunctionSpec", "InvocationPlan",
+    "InvocationRecord",
     "Firecracker", "SnapshotCache", "GVisor",
     "JunctionInstance", "UProc", "Junctiond", "Quark", "WasmSandbox",
     "NetStack", "CorePool",
-    "JunctionScheduler", "PollingModel", "Event", "Process", "Queue",
-    "Simulator", "LatencySummary", "run_open_loop", "run_sequential",
+    "JunctionScheduler", "PollingModel", "Event", "EventLoop", "Process",
+    "Queue",
+    "Simulator", "LatencySummary", "LoadSpec", "SimObserver", "NullObserver",
+    "drive", "run_open_loop", "run_sequential",
     "sustainable_throughput",
     "ArrivalProcess", "PoissonArrivals", "BurstyArrivals", "DiurnalArrivals",
     "TraceReplay", "heavy_tailed_work", "knee_of_curve",

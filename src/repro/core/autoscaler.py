@@ -193,8 +193,10 @@ class ScaleEvent:
 class Autoscaler:
     """Controller loop scaling every deployed function per its policy.
 
-    Load signal: callers feed ``on_arrival``/``on_done`` (the open-loop
-    drivers in :mod:`repro.core.workload` accept them as hooks).  The
+    Load signal: the autoscaler implements the
+    :class:`repro.core.workload.SimObserver` protocol — pass it as the
+    ``observer`` of :func:`repro.core.workload.drive` and every admitted
+    arrival/completion feeds ``on_arrival``/``on_done``.  The
     controller samples the *peak* in-flight count per control period, so
     bursts shorter than the period still register.  Replica truth comes
     from the backend's ``lookup`` — there is no shadow replica dict.

@@ -8,6 +8,7 @@ run-to-completion scheduling sets a near-1 cap.
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Generator, Optional
 
 from repro.core.latency import RuntimeCosts
@@ -20,7 +21,12 @@ class CorePool:
         self.n_cores = n_cores
         self.runtime = runtime
         self.busy = 0
-        self._waiters: list = []
+        # FIFO of waiters; entries are either Event (generator path) or
+        # (avail_t, cb, args, weight) tuples (event-heap fast path) —
+        # both paths drain through _grant_next so mixed traffic (a fast
+        # open loop plus legacy deploy/invoke processes) shares one queue
+        self._waiters: deque = deque()
+        self._queued_weight = 0     # extra backlog weight of fast waiters
         # accounting
         self.busy_time = 0.0
         self.served = 0
@@ -28,7 +34,7 @@ class CorePool:
     # -- inspection ------------------------------------------------------
     @property
     def backlog(self) -> int:
-        return len(self._waiters)
+        return len(self._waiters) + self._queued_weight
 
     def thrash(self) -> float:
         r = self.runtime
@@ -52,8 +58,57 @@ class CorePool:
         self.busy -= 1
         self.busy_time += eff
         self.served += 1
+        self._grant_next()
+
+    # -- event-heap fast path --------------------------------------------
+    #
+    # The flat driver (repro.core.workload.drive, engine="events") holds
+    # cores without generator machinery: ``acquire_fast`` grants a core
+    # and calls ``cb(start_t, *args)``; the callee times its own hold and
+    # releases with ``release_fast``.  Thrash semantics match ``consume``
+    # (multiplier read at grant time).
+
+    def acquire_fast(self, avail_t: float, cb, args=(), weight: int = 1):
+        """Request one core for a hold that can start no earlier than
+        ``avail_t`` (the caller's in-flight network gap).  When a core is
+        free the grant is immediate — reserving through a µs-scale future
+        ``avail_t`` while at least one other core stays free, which costs
+        capacity only when the pool is nearly full, where the wakeup
+        event below takes over instead.  ``weight`` is this waiter's
+        contribution to the thrash backlog (a merged off-path job stands
+        for several legacy jobs)."""
+        now = self.sim.now
+        if self.busy < self.n_cores and not self._waiters:
+            if avail_t <= now:
+                self.busy += 1
+                cb(now, *args)
+            elif self.busy < self.n_cores - 1:
+                self.busy += 1
+                cb(avail_t, *args)
+            else:
+                self.sim._schedule(avail_t - now, self.acquire_fast,
+                                   avail_t, cb, args, weight)
+        else:
+            self._waiters.append((avail_t, cb, args, weight))
+            self._queued_weight += weight - 1
+
+    def release_fast(self, eff: float) -> None:
+        self.busy -= 1
+        self.busy_time += eff
+        self.served += 1
+        self._grant_next()
+
+    def _grant_next(self) -> None:
         if self._waiters and self.busy < self.n_cores:
-            self._waiters.pop(0).succeed()
+            w = self._waiters.popleft()
+            if type(w) is tuple:
+                avail_t, cb, args, weight = w
+                self._queued_weight -= weight - 1
+                self.busy += 1
+                now = self.sim.now
+                cb(avail_t if avail_t > now else now, *args)
+            else:
+                w.succeed()
 
     def remove_cores(self, n: int) -> None:
         """Dedicate cores elsewhere (e.g. per-instance polling)."""

@@ -9,17 +9,21 @@ all deterministic under a fixed RNG so every stream is reproducible.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
-from typing import Callable, Dict, List, Optional, Sequence
+import warnings
+from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
-from repro.core.faas import FaasdRuntime, FunctionSpec
-from repro.core.simulator import Simulator
+from repro.core.faas import (FaasdRuntime, FunctionSpec, InvocationPlan,
+                             InvocationRecord)
+from repro.core.simulator import EventLoop, Simulator
 
 
-def percentile(xs: List[float], p: float) -> float:
-    if not xs:
+def percentile(xs: Sequence[float], p: float) -> float:
+    if len(xs) == 0:
         return float("nan")
     return float(np.percentile(np.asarray(xs), p))
 
@@ -33,14 +37,18 @@ class LatencySummary:
     p999_ms: float
 
     @staticmethod
-    def of(latencies_ms: List[float]) -> "LatencySummary":
-        return LatencySummary(
-            n=len(latencies_ms),
-            median_ms=percentile(latencies_ms, 50),
-            p99_ms=percentile(latencies_ms, 99),
-            mean_ms=float(np.mean(latencies_ms)) if latencies_ms else float("nan"),
-            p999_ms=percentile(latencies_ms, 99.9),
-        )
+    def of(latencies_ms: Sequence[float]) -> "LatencySummary":
+        # one array conversion + one percentile call for all three
+        # quantiles: the knee search summarises every probe, so a
+        # per-quantile sort compounds with the driver's cost
+        a = np.asarray(latencies_ms, dtype=np.float64)
+        if a.size == 0:
+            nan = float("nan")
+            return LatencySummary(0, nan, nan, nan, nan)
+        med, p99, p999 = np.percentile(a, (50.0, 99.0, 99.9))
+        return LatencySummary(n=int(a.size), median_ms=float(med),
+                              p99_ms=float(p99), mean_ms=float(a.mean()),
+                              p999_ms=float(p999))
 
 
 def run_sequential(runtime: FaasdRuntime, fn_name: str, n: int = 100,
@@ -82,64 +90,21 @@ def run_open_loop(runtime: FaasdRuntime, fn_name: str, rate_rps: float,
                   on_arrival: Optional[Callable[[str], None]] = None,
                   on_done: Optional[Callable[[str], None]] = None,
                   ) -> Dict[str, float]:
-    """Fig 6 methodology: Poisson open-loop arrivals at an offered rate.
+    """Deprecated shim: Poisson open loop over a single function.
 
-    ``on_arrival``/``on_done`` fire per admitted request (rejected
-    arrivals never reach them) — the hooks an autoscaler's load signal
-    plugs into without scenario-specific glue.
-    """
-    sim = runtime.sim
-    outstanding = [0]
-    admitted = [0]                  # admitted arrivals past warmup: the
-    # completed_frac denominator must count every admitted request, not
-    # just the ones that finished (records only exist on completion)
-    rejected0 = runtime.rejected    # report this run's delta, not the
-    # runtime-lifetime counter: knee-search bracketing reuses one runtime
-    # across rates, and a cumulative count would fail rejected==0 forever
-    t_warm = sim.now + warmup_s
-
-    def arrivals():
-        t_end = sim.now + duration_s
-        while sim.now < t_end:
-            yield sim.timeout(sim.exponential(1.0 / rate_rps))
-            if outstanding[0] >= max_outstanding:
-                runtime.rejected += 1
-                continue
-            outstanding[0] += 1
-            if sim.now >= t_warm:
-                admitted[0] += 1
-            if on_arrival is not None:
-                on_arrival(fn_name)
-
-            def one():
-                yield from runtime.invoke(fn_name)
-                outstanding[0] -= 1
-                if on_done is not None:
-                    on_done(fn_name)
-
-            sim.process(one())
-
-    start_idx = len(runtime.records)
-    t0 = sim.now
-    sim.process(arrivals())
-    sim.run(until=t0 + duration_s + 2.0)  # drain window
-    recs = [r for r in runtime.records[start_idx:]
-            if r.t_arrival >= t0 + warmup_s]
-    lat = [r.e2e * 1e3 for r in recs]
-    done_in_window = [r for r in recs if r.t_done <= t0 + duration_s + 2.0]
-    ach = len(done_in_window) / max(1e-9, duration_s - warmup_s)
-    summary = LatencySummary.of(lat)
-    return {
-        "offered_rps": rate_rps,
-        "achieved_rps": ach,
-        "completion_rps": _completion_rps(done_in_window, t0 + warmup_s,
-                                          t0 + duration_s),
-        "completed_frac": len(done_in_window) / max(1, admitted[0]),
-        "median_ms": summary.median_ms,
-        "p99_ms": summary.p99_ms,
-        "n": summary.n,
-        "rejected": runtime.rejected - rejected0,
-    }
+    Superseded by :func:`drive` with ``LoadSpec.single(fn, rate)``; this
+    signature delegates there (one release of grace for out-of-tree
+    callers) and will be removed."""
+    warnings.warn(
+        "run_open_loop is deprecated; use "
+        "drive(runtime, LoadSpec.single(fn, rate), observer=...)",
+        DeprecationWarning, stacklevel=2)
+    load = LoadSpec(arrivals=PoissonArrivals(rate_rps), functions=(fn_name,),
+                    duration_s=duration_s, warmup_s=warmup_s,
+                    max_outstanding=max_outstanding, drain_s=2.0)
+    res = drive(runtime, load, observer=_hooks_observer(on_arrival, on_done))
+    res["offered_rps"] = rate_rps        # the legacy key meant the nominal rate
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -271,25 +236,469 @@ class TraceReplay(ArrivalProcess):
         return len(ts) / max(span, 1e-9)
 
 
+class _ParetoWork:
+    """Truncated-Pareto work sampler; callable per invocation (the
+    generator path draws one variate per request) and batchable via
+    :meth:`sample` (the event-heap driver draws whole runs at once)."""
+
+    __slots__ = ("rng", "xm", "alpha", "cap")
+
+    def __init__(self, rng: np.random.Generator, xm: float, alpha: float,
+                 cap: float):
+        self.rng = rng
+        self.xm = xm
+        self.alpha = alpha
+        self.cap = cap
+
+    def __call__(self) -> float:
+        u = 1.0 - self.rng.random()     # u in (0, 1]
+        return float(min(self.xm * u ** (-1.0 / self.alpha), self.cap))
+
+    def sample(self, n: int) -> np.ndarray:
+        u = 1.0 - self.rng.random(n)
+        return np.minimum(self.xm * u ** (-1.0 / self.alpha), self.cap)
+
+
 def heavy_tailed_work(rng: np.random.Generator, median_us: float,
                       alpha: float = 1.6,
                       cap_mult: float = 200.0) -> Callable[[], float]:
     """Pareto per-invocation CPU work (heavy-tailed payload sizes): returns
     a sampler usable as ``FunctionSpec.work_us``.  ``median_us`` pins the
     distribution median; ``cap_mult`` truncates the tail so a single
-    invocation cannot exceed median*cap_mult."""
+    invocation cannot exceed median*cap_mult.  The sampler also exposes
+    ``.sample(n)`` so batch drivers draw a run's worth of work at once."""
     xm = median_us / (2.0 ** (1.0 / alpha))
-    cap = median_us * cap_mult
-
-    def sample() -> float:
-        u = 1.0 - rng.random()          # u in (0, 1]
-        return float(min(xm * u ** (-1.0 / alpha), cap))
-
-    return sample
+    return _ParetoWork(rng, xm, alpha, median_us * cap_mult)
 
 
 # ---------------------------------------------------------------------------
-# Generic open-loop driver: any arrival process over a multi-function mix.
+# The open-loop driver: drive(runtime, LoadSpec, observer).
+#
+# One entry point subsumes the old run_open_loop / run_mixed_open_loop
+# pair: a LoadSpec names the arrival process and function mix, a
+# SimObserver taps per-request admission/completion (autoscalers, knee
+# feedback, tracers), and the engine choice picks between the event-heap
+# fast path (default; ~5 station holds + 1 off-path job per request on
+# flat callbacks) and the generator reference path that walks the full
+# 14-segment invocation chain.  Both produce the same result schema from
+# the same record stream, so they are same-seed comparable.
+
+
+class SimObserver(Protocol):
+    """Per-request taps on an open-loop run.  Both fire only for
+    *admitted* requests (rejected arrivals reach neither); ``on_done``
+    fires at response completion, in completion order."""
+
+    def on_arrival(self, fn_name: str) -> None: ...
+
+    def on_done(self, fn_name: str) -> None: ...
+
+
+class NullObserver:
+    """Default observer; ``drive`` recognises it and skips dispatch
+    entirely, so unobserved runs pay nothing on the hot path."""
+
+    __slots__ = ()
+
+    def on_arrival(self, fn_name: str) -> None:
+        pass
+
+    def on_done(self, fn_name: str) -> None:
+        pass
+
+
+_NULL_OBSERVER = NullObserver()
+
+
+class _HookObserver:
+    """Adapts the legacy ``on_arrival=``/``on_done=`` callback pair."""
+
+    __slots__ = ("_on_arrival", "_on_done")
+
+    def __init__(self, on_arrival, on_done):
+        self._on_arrival = on_arrival
+        self._on_done = on_done
+
+    def on_arrival(self, fn_name: str) -> None:
+        if self._on_arrival is not None:
+            self._on_arrival(fn_name)
+
+    def on_done(self, fn_name: str) -> None:
+        if self._on_done is not None:
+            self._on_done(fn_name)
+
+
+def _hooks_observer(on_arrival, on_done) -> Optional[SimObserver]:
+    if on_arrival is None and on_done is None:
+        return None
+    return _HookObserver(on_arrival, on_done)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadSpec:
+    """What to offer a runtime: an arrival process over a weighted
+    function mix, plus the observation window.
+
+    ``warmup_s`` (absolute) overrides ``warmup_frac`` when set — latency
+    statistics and the completed-fraction denominator only count
+    requests arriving after the warmup boundary, though every admitted
+    request still runs (and reaches the observer)."""
+
+    arrivals: ArrivalProcess
+    functions: Tuple[str, ...]
+    weights: Optional[Tuple[float, ...]] = None
+    duration_s: float = 2.0
+    warmup_frac: float = 0.2
+    warmup_s: Optional[float] = None
+    max_outstanding: int = 20000
+    drain_s: float = 2.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "functions", tuple(self.functions))
+        if not self.functions:
+            raise ValueError("LoadSpec needs at least one function")
+        if self.weights is not None:
+            w = tuple(float(x) for x in self.weights)
+            if len(w) != len(self.functions):
+                raise ValueError(
+                    f"{len(w)} weights for {len(self.functions)} functions")
+            object.__setattr__(self, "weights", w)
+
+    @classmethod
+    def single(cls, fn_name: str, rate_rps: float, **kw) -> "LoadSpec":
+        """Poisson arrivals over one function (the Fig 6 shape)."""
+        return cls(arrivals=PoissonArrivals(rate_rps), functions=(fn_name,),
+                   **kw)
+
+    @property
+    def effective_warmup_s(self) -> float:
+        return (self.warmup_s if self.warmup_s is not None
+                else self.warmup_frac * self.duration_s)
+
+    def normalized_weights(self) -> np.ndarray:
+        if self.weights is None:
+            k = len(self.functions)
+            return np.full(k, 1.0 / k)
+        w = np.asarray(self.weights, dtype=np.float64)
+        return w / w.sum()
+
+
+def _fast_capable(runtime: FaasdRuntime, load: LoadSpec) -> bool:
+    """The event engine compiles the warm cached-resolve chain; a run
+    that would take the provider's backend-query path (cache disabled or
+    not yet populated) must use the generator engine, which models it."""
+    if not getattr(runtime, "provider_cache", False):
+        return False
+    cache = getattr(runtime, "_cache", None)
+    return cache is not None and all(fn in cache for fn in load.functions)
+
+
+def drive(runtime: FaasdRuntime, load: LoadSpec,
+          observer: Optional[SimObserver] = None,
+          engine: str = "events") -> Dict[str, object]:
+    """Run ``load`` against ``runtime`` as an open loop; returns the
+    result row (rates, completed fraction, latency summary, per-function
+    summaries, raw latencies).
+
+    ``engine="events"`` (default) executes hop-compressed invocations on
+    the flat event heap — order-of-magnitude faster, statistically
+    equivalent; ``engine="process"`` walks the full generator chain (the
+    reference semantics).  Runs that the fast engine cannot represent
+    (uncached endpoint resolution) fall back to the process engine
+    automatically."""
+    if engine not in ("events", "process"):
+        raise ValueError(f"unknown engine {engine!r}")
+    for fn in load.functions:
+        if fn not in runtime.functions:
+            raise KeyError(f"function {fn!r} not deployed")
+    obs = observer if observer is not None else _NULL_OBSERVER
+    if engine == "events" and not _fast_capable(runtime, load):
+        engine = "process"
+    if engine == "events":
+        return _drive_events(runtime, load, obs)
+    return _drive_process(runtime, load, obs)
+
+
+def _assemble(runtime: FaasdRuntime, start_idx: int,
+              fn_names: Sequence[str], t0: float, duration_s: float,
+              warmup_s: float, drain_s: float, admitted: int,
+              rejected0: int, offered_rps: float) -> Dict[str, object]:
+    """Result row shared by both engines, from the run's record slice."""
+    recs = [r for r in runtime.records[start_idx:]
+            if r.t_arrival >= t0 + warmup_s]
+    done = [r for r in recs if r.t_done <= t0 + duration_s + drain_s]
+    lat = [r.e2e * 1e3 for r in recs]
+    summary = LatencySummary.of(lat)
+    per_fn: Dict[str, LatencySummary] = {}
+    for name in fn_names:
+        fn_lat = [r.e2e * 1e3 for r in recs if r.fn == name]
+        if fn_lat:
+            per_fn[name] = LatencySummary.of(fn_lat)
+    return {
+        "offered_rps": offered_rps,
+        "achieved_rps": len(done) / max(1e-9, duration_s - warmup_s),
+        "completion_rps": _completion_rps(done, t0 + warmup_s,
+                                          t0 + duration_s),
+        "completed_frac": len(done) / max(1, admitted),
+        "median_ms": summary.median_ms,
+        "p99_ms": summary.p99_ms,
+        "mean_ms": summary.mean_ms,
+        "p999_ms": summary.p999_ms,
+        "n": summary.n,
+        "rejected": runtime.rejected - rejected0,
+        "per_fn": per_fn,
+        "latencies_ms": lat,
+    }
+
+
+def _drive_process(runtime: FaasdRuntime, load: LoadSpec,
+                   obs: SimObserver) -> Dict[str, object]:
+    """Reference engine: every request walks the full generator chain."""
+    sim = runtime.sim
+    fn_names = load.functions
+    duration_s = load.duration_s
+    warmup_s = load.effective_warmup_s
+    t0 = sim.now
+    rel_times = load.arrivals.times(sim.rng, duration_s)
+    picks = sim.rng.choice(len(fn_names), size=len(rel_times),
+                           p=load.normalized_weights())
+    outstanding = [0]
+    admitted = [0]                  # admitted past-warmup arrivals: the
+    # completed_frac denominator must count every admitted request, not
+    # just the ones that finished (records only exist on completion)
+    rejected0 = runtime.rejected    # report this run's delta, not the
+    # runtime-lifetime counter: knee-search bracketing reuses one runtime
+    # across rates, and a cumulative count would fail rejected==0 forever
+    observed = obs is not _NULL_OBSERVER
+
+    def driver():
+        for rel_t, pick in zip(rel_times, picks):
+            yield sim.timeout(t0 + float(rel_t) - sim.now)
+            if outstanding[0] >= load.max_outstanding:
+                runtime.rejected += 1
+                continue
+            outstanding[0] += 1
+            if rel_t >= warmup_s:
+                admitted[0] += 1
+            if observed:
+                obs.on_arrival(fn_names[pick])
+
+            def one(fn=fn_names[pick]):
+                yield from runtime.invoke(fn)
+                outstanding[0] -= 1
+                if observed:
+                    obs.on_done(fn)
+
+            sim.process(one())
+
+    start_idx = len(runtime.records)
+    sim.process(driver())
+    sim.run(until=t0 + duration_s + load.drain_s)
+    return _assemble(runtime, start_idx, fn_names, t0, duration_s, warmup_s,
+                     load.drain_s, admitted[0], rejected0,
+                     len(rel_times) / max(duration_s, 1e-9))
+
+
+def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
+                  obs: SimObserver) -> Dict[str, object]:
+    """Fast engine: hop-compressed invocations on the flat event heap.
+
+    All per-request randomness is drawn up front in vectorized batches
+    (arrival times from the process, then per function: app jitter, work,
+    overhead, hiccups, net jitter — see ``InvocationPlan.sample``); the
+    event loop then runs pure float arithmetic over plain callbacks.
+    Generator processes already on the simulator (autoscaler operations,
+    the Junction scheduler poll loop, provisioning storms) interleave
+    through the shared heap and contend for the same core pool."""
+    sim = runtime.sim
+    fn_names = load.functions
+    duration_s = load.duration_s
+    warmup_s = load.effective_warmup_s
+    drain_s = load.drain_s
+    max_out = load.max_outstanding
+    t0 = sim.now
+    rel = load.arrivals.times(sim.rng, duration_s)
+    n = len(rel)
+    if len(fn_names) > 1:
+        picks = sim.rng.choice(len(fn_names), size=n,
+                               p=load.normalized_weights())
+    else:
+        picks = np.zeros(n, dtype=np.intp)
+
+    H = np.empty((n, 3))            # station CPU holds
+    G = np.empty((n, 2))            # inter-station latency gaps
+    OFF = np.empty(n)               # merged off-path CPU job
+    EX = np.empty(n)                # exec-span approximation for records
+    stack = runtime.stack
+    for f, nm in enumerate(fn_names):
+        mask = picks == f
+        m = int(mask.sum())
+        if m == 0:
+            continue
+        plan = runtime.invocation_plan(nm)
+        h, g, off, ex, n_hic = plan.sample(sim.rng, m)
+        H[mask] = h
+        G[mask] = g
+        OFF[mask] = off
+        EX[mask] = ex
+        # netstack accounting the per-request path would have done
+        stack.messages += 4 * m
+        stack.cpu_spent += m * plan.stack_cpu_s
+        stack.hiccups += n_hic
+
+    # plain lists: ~3x faster element access than ndarray scalars here
+    HL = H.tolist()
+    GL = G.tolist()
+    OFFL = OFF.tolist()
+    EXL = EX.tolist()
+    ATL = (t0 + rel).tolist()
+    picksL = picks.tolist()
+    ex_start = [0.0] * n
+
+    # The station machine below inlines CorePool.acquire_fast /
+    # release_fast field-for-field (busy/_waiters/_queued_weight stay
+    # consistent, and queued grants drain through pool._grant_next either
+    # way) — at ~4 heap events per request, each spared function call is
+    # a measurable slice of the wall time.  busy_time/served are pure
+    # end-of-run accounting (nothing reads them mid-run), so they
+    # accumulate in locals and flush once after the loop.  Two
+    # consequences of the pool's invariants are exploited: an immediate
+    # grant requires an empty waiter queue, where backlog == 0 and the
+    # thrash multiplier is exactly 1.0; only grants popped off the waiter
+    # queue (by _granted/_off_granted below) see a non-trivial backlog.
+    pool = runtime.cores
+    waiters = pool._waiters
+    grant_next = pool._grant_next
+    t_coeff = runtime.runtime.thrash_coeff
+    t_cap = runtime.runtime.thrash_cap
+    heap = sim._heap
+    push = heapq.heappush
+    counter = sim._counter
+    records = runtime.records
+    off_weight = InvocationPlan.OFFPATH_BACKLOG_WEIGHT
+    st_weight = InvocationPlan.STATION_BACKLOG_WEIGHT
+    observed = obs is not _NULL_OBSERVER
+    t_warm = t0 + warmup_s
+    outstanding = 0
+    admitted = 0
+    busy_time = 0.0
+    served = 0
+    rejected0 = runtime.rejected
+    start_idx = len(records)
+
+    def _admit(i, t):
+        nonlocal outstanding, admitted
+        if outstanding >= max_out:
+            runtime.rejected += 1
+            return
+        outstanding += 1
+        if t >= t_warm:
+            admitted += 1
+        runtime.cache_hits += 1     # warm cached resolve per request
+        if observed:
+            obs.on_arrival(fn_names[picksL[i]])
+        b = pool.busy
+        if b < pool.n_cores and not waiters:
+            pool.busy = b + 1
+            eff = HL[i][0]          # empty queue -> thrash == 1.0
+            push(heap, (t + eff, next(counter), _complete, (i, 0, eff, t)))
+        else:
+            waiters.append((t, _granted, (i, 0), st_weight))
+            pool._queued_weight += st_weight - 1
+
+    def _complete(i, k, eff, start):
+        # release the station's core (event time is always start + eff)
+        nonlocal busy_time, served
+        pool.busy -= 1
+        busy_time += eff
+        served += 1
+        if waiters:
+            grant_next()
+        now = start + eff
+        if k == 2:
+            nonlocal outstanding
+            outstanding -= 1
+            rec = InvocationRecord(fn=fn_names[picksL[i]], t_arrival=ATL[i])
+            rec.t_start_exec = ex_start[i]
+            rec.t_end_exec = ex_start[i] + EXL[i]
+            rec.t_done = now
+            records.append(rec)
+            if observed:
+                obs.on_done(rec.fn)
+            return
+        if k == 0:
+            off = OFFL[i]
+            if off > 0.0:           # merged off-path CPU job
+                b = pool.busy
+                if b < pool.n_cores and not waiters:
+                    pool.busy = b + 1
+                    push(heap, (now + off, next(counter), _off_done, (off,)))
+                else:
+                    waiters.append((now, _off_granted, (off,), off_weight))
+                    pool._queued_weight += off_weight - 1
+        else:
+            # completion of the exec station: its grant time starts the
+            # recorded exec span
+            ex_start[i] = start
+        # acquire the next station's core, available after the net gap
+        avail = now + GL[i][k]
+        k += 1
+        b = pool.busy
+        nc = pool.n_cores
+        if b < nc and not waiters:
+            if b < nc - 1:
+                # reserve through the µs-scale gap while the pool keeps a
+                # spare core; near saturation fall through to a wakeup
+                # event at avail instead (no capacity is held idle)
+                pool.busy = b + 1
+                eff = HL[i][k]
+                push(heap, (avail + eff, next(counter), _complete,
+                            (i, k, eff, avail)))
+            else:
+                push(heap, (avail, next(counter), _retry, (avail, i, k)))
+        else:
+            waiters.append((avail, _granted, (i, k), st_weight))
+            pool._queued_weight += st_weight - 1
+
+    def _retry(avail, i, k):
+        b = pool.busy
+        if b < pool.n_cores and not waiters:
+            pool.busy = b + 1
+            eff = HL[i][k]          # empty queue -> thrash == 1.0
+            push(heap, (avail + eff, next(counter), _complete,
+                        (i, k, eff, avail)))
+        else:
+            waiters.append((avail, _granted, (i, k), st_weight))
+            pool._queued_weight += st_weight - 1
+
+    def _granted(start, i, k):
+        # popped off the waiter queue by a release; the remaining backlog
+        # sets this hold's thrash multiplier (as in CorePool.consume)
+        th = 1.0 + t_coeff * (len(waiters) + pool._queued_weight) \
+            / pool.n_cores
+        eff = HL[i][k] * (t_cap if th > t_cap else th)
+        push(heap, (start + eff, next(counter), _complete, (i, k, eff, start)))
+
+    def _off_granted(start, off):
+        th = 1.0 + t_coeff * (len(waiters) + pool._queued_weight) \
+            / pool.n_cores
+        eff = off * (t_cap if th > t_cap else th)
+        push(heap, (start + eff, next(counter), _off_done, (eff,)))
+
+    def _off_done(eff):
+        nonlocal busy_time, served
+        pool.busy -= 1
+        busy_time += eff
+        served += 1
+        if waiters:
+            grant_next()
+
+    EventLoop(sim).run(t0 + duration_s + drain_s, ATL, _admit)
+    pool.busy_time += busy_time
+    pool.served += served
+    return _assemble(runtime, start_idx, fn_names, t0, duration_s, warmup_s,
+                     drain_s, admitted, rejected0,
+                     n / max(duration_s, 1e-9))
 
 
 def run_mixed_open_loop(runtime: FaasdRuntime, fn_names: Sequence[str],
@@ -300,73 +709,19 @@ def run_mixed_open_loop(runtime: FaasdRuntime, fn_names: Sequence[str],
                         on_arrival: Optional[Callable[[str], None]] = None,
                         on_done: Optional[Callable[[str], None]] = None,
                         ) -> Dict[str, object]:
-    """Open-loop run of ``arrivals`` over a weighted function mix.
+    """Deprecated shim: open-loop run over a weighted function mix.
 
-    Generalizes ``run_open_loop`` (single fn, Poisson) to arbitrary arrival
-    processes and multi-tenant mixes; returns overall + per-function stats.
-    ``on_arrival``/``on_done`` fire per admitted request (rejected
-    arrivals never reach them) so any open-loop driver can feed an
-    autoscaler's load signal.
-    """
-    sim = runtime.sim
-    w = np.asarray(weights, dtype=np.float64)
-    w = w / w.sum()
-    t0 = sim.now
-    rel_times = arrivals.times(sim.rng, duration_s)
-    picks = sim.rng.choice(len(fn_names), size=len(rel_times), p=w)
-    outstanding = [0]
-    admitted = [0]                  # admitted past-warmup arrivals (the
-    # completed_frac denominator; see run_open_loop)
-    rejected0 = runtime.rejected
-    warmup_s = warmup_frac * duration_s
-
-    def driver():
-        for rel_t, pick in zip(rel_times, picks):
-            yield sim.timeout(t0 + float(rel_t) - sim.now)
-            if outstanding[0] >= max_outstanding:
-                runtime.rejected += 1
-                continue
-            outstanding[0] += 1
-            if rel_t >= warmup_s:
-                admitted[0] += 1
-            if on_arrival is not None:
-                on_arrival(fn_names[pick])
-
-            def one(fn=fn_names[pick]):
-                yield from runtime.invoke(fn)
-                outstanding[0] -= 1
-                if on_done is not None:
-                    on_done(fn)
-
-            sim.process(one())
-
-    start_idx = len(runtime.records)
-    sim.process(driver())
-    sim.run(until=t0 + duration_s + drain_s)
-    recs = [r for r in runtime.records[start_idx:]
-            if r.t_arrival >= t0 + warmup_s]
-    done = [r for r in recs if r.t_done <= t0 + duration_s + drain_s]
-    summary = LatencySummary.of([r.e2e * 1e3 for r in recs])
-    per_fn: Dict[str, LatencySummary] = {}
-    for name in fn_names:
-        lat = [r.e2e * 1e3 for r in recs if r.fn == name]
-        if lat:
-            per_fn[name] = LatencySummary.of(lat)
-    return {
-        "offered_rps": len(rel_times) / max(duration_s, 1e-9),
-        "achieved_rps": len(done) / max(1e-9, duration_s - warmup_s),
-        "completion_rps": _completion_rps(done, t0 + warmup_s,
-                                          t0 + duration_s),
-        "completed_frac": len(done) / max(1, admitted[0]),
-        "median_ms": summary.median_ms,
-        "p99_ms": summary.p99_ms,
-        "mean_ms": summary.mean_ms,
-        "p999_ms": summary.p999_ms,
-        "n": summary.n,
-        "rejected": runtime.rejected - rejected0,
-        "per_fn": per_fn,
-        "latencies_ms": [r.e2e * 1e3 for r in recs],
-    }
+    Superseded by :func:`drive` with a :class:`LoadSpec`; delegates there
+    (one release of grace for out-of-tree callers) and will be removed."""
+    warnings.warn(
+        "run_mixed_open_loop is deprecated; use "
+        "drive(runtime, LoadSpec(...), observer=...)",
+        DeprecationWarning, stacklevel=2)
+    load = LoadSpec(arrivals=arrivals, functions=tuple(fn_names),
+                    weights=tuple(float(x) for x in weights),
+                    duration_s=duration_s, warmup_frac=warmup_frac,
+                    max_outstanding=max_outstanding, drain_s=drain_s)
+    return drive(runtime, load, observer=_hooks_observer(on_arrival, on_done))
 
 
 def _row_rate(row: Dict[str, float], rate_key: str) -> float:
@@ -632,7 +987,8 @@ def sustainable_throughput(backend: str, fn: Optional[FunctionSpec] = None,
         sim = Simulator(seed=seed)
         rt = FaasdRuntime(sim, backend=backend, n_cores=n_cores)
         rt.deploy_blocking(fn)
-        res = run_open_loop(rt, fn.name, rate_rps=rate)
+        res = drive(rt, LoadSpec.single(fn.name, rate, warmup_s=0.3))
+        res["offered_rps"] = float(rate)
         curve.append(res)
         ok = (res["p99_ms"] <= slo_p99_ms
               and res["achieved_rps"] >= 0.85 * rate and res["rejected"] == 0)

@@ -20,10 +20,9 @@ import numpy as np
 from repro.core.autoscaler import Autoscaler
 from repro.core.faas import FaasdRuntime, FunctionSpec
 from repro.core.simulator import Simulator
-from repro.core.workload import (KneeSearch, LatencySummary,
+from repro.core.workload import (KneeSearch, LatencySummary, drive,
                                  heavy_tailed_work, knee_index_of_curve,
-                                 knee_of_curve, percentile,
-                                 run_mixed_open_loop, run_sequential)
+                                 knee_of_curve, percentile, run_sequential)
 from repro.experiments.artifacts import (build_artifact, latency_histogram,
                                          metric_row)
 from repro.experiments.scenario import (FunctionProfile, Scenario,
@@ -161,12 +160,8 @@ def _open_loop_run(sc: Scenario, backend: str, seed: int, rate: float,
     sim = Simulator(seed=seed)
     rt = FaasdRuntime(sim, backend=backend, n_cores=sc.n_cores)
     _deploy_mix(rt, sc.functions)
-    asc = _make_autoscaler(sc, rt)
-    res = run_mixed_open_loop(
-        rt, sc.fn_names(), sc.weights(), sc.arrival.build(rate),
-        duration_s=duration, warmup_frac=sc.warmup_frac,
-        on_arrival=asc.on_arrival if asc else None,
-        on_done=asc.on_done if asc else None)
+    asc = _make_autoscaler(sc, rt)     # an Autoscaler is a SimObserver
+    res = drive(rt, sc.load_spec(rate, duration), observer=asc)
     lats = res.pop("latencies_ms")
     res.pop("per_fn")
     if asc is not None:
@@ -469,12 +464,7 @@ def _exec_mixed(sc: Scenario, backend: str, duration_scale: float,
         for i in range(k):
             sim.process(one_storm(i))
         start_idx = len(rt.records)
-        run_mixed_open_loop(
-            rt, sc.fn_names(), sc.weights(),
-            sc.arrival.build(rate), duration_s=duration,
-            warmup_frac=sc.warmup_frac,
-            on_arrival=asc.on_arrival if asc else None,
-            on_done=asc.on_done if asc else None)
+        drive(rt, sc.load_spec(rate, duration), observer=asc)
         if asc is not None:
             asc_runs.append(asc.telemetry())
         warmup = sc.warmup_frac * duration

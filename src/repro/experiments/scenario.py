@@ -17,7 +17,7 @@ from repro.core.autoscaler import (LeadTimePolicy, QueueDepthPolicy,
                                    ScalePolicy)
 from repro.core.latency import AES_600B_WORK_US
 from repro.core.workload import (ArrivalProcess, BurstyArrivals,
-                                 DiurnalArrivals, PoissonArrivals,
+                                 DiurnalArrivals, LoadSpec, PoissonArrivals,
                                  TraceReplay)
 
 # Default matrix: the paper's pair.  Scenarios can widen this to any set
@@ -219,6 +219,15 @@ class Scenario:
 
     def fn_names(self) -> List[str]:
         return [f.name for f in self.functions]
+
+    def load_spec(self, rate: float, duration_s: float) -> LoadSpec:
+        """The :func:`repro.core.workload.drive` load for one open-loop
+        run of this scenario at ``rate`` (mix, arrivals, warmup)."""
+        return LoadSpec(arrivals=self.arrival.build(rate),
+                        functions=tuple(self.fn_names()),
+                        weights=tuple(self.weights()),
+                        duration_s=duration_s,
+                        warmup_frac=self.warmup_frac)
 
     def rates_for(self, backend: str, smoke: bool = False) -> Sequence[float]:
         """Rate grid for one backend; the ``"*"`` key is the fallback grid

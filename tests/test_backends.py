@@ -605,6 +605,21 @@ def test_compare_flags_regressions_in_both_directions():
         "fig5_junctiond_median", "fig6_throughput_ratio"}
 
 
+def test_compare_sim_throughput_is_higher_is_better():
+    # the event-heap driver's raw-speed gate: a drop in simulated
+    # requests per wall-second must read as a regression, never as an
+    # improved "latency"
+    from benchmarks.compare import _direction, compare_metrics
+    assert _direction("sim_throughput") == "higher"
+    assert _direction("sim_throughput_speedup") == "higher"
+    old = _metrics_doc(sim_throughput=47000.0, sim_throughput_speedup=20.0)
+    new = _metrics_doc(sim_throughput=20000.0, sim_throughput_speedup=25.0)
+    rows, _ = compare_metrics(old, new, threshold=0.10)
+    by = {r["name"]: r for r in rows}
+    assert by["sim_throughput"]["status"] == "regressed"
+    assert by["sim_throughput_speedup"]["status"] == "improved"
+
+
 def test_compare_improvements_and_new_metrics_are_not_regressions():
     from benchmarks.compare import compare_metrics, regressions
     old = _metrics_doc(fig5_junctiond_median=500.0)

@@ -1,0 +1,269 @@
+"""Event-heap driver equivalence: drive(engine="events") must be a
+statistical stand-in for the generator reference engine.
+
+The fast engine compresses the 14-segment invocation chain to 5 CPU
+stations + 1 merged off-path job and draws all randomness in vectorized
+batches, so the two engines consume the RNG differently — equivalence is
+*statistical* (same-seed distributional agreement within tolerances),
+while each engine on its own is byte-identical across same-seed runs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Autoscaler, BurstyArrivals, DiurnalArrivals,
+                        FaasdRuntime, FunctionSpec, KneeSearch, LoadSpec,
+                        PoissonArrivals, QueueDepthPolicy, Simulator,
+                        TraceReplay, drive, heavy_tailed_work,
+                        run_mixed_open_loop, run_open_loop)
+from repro.core.simulator import EventLoop
+from repro.core.workload import NullObserver
+
+BACKENDS_AND_RATES = [
+    ("containerd", 800.0),
+    ("junctiond", 6000.0),
+    ("quark", 700.0),
+    ("wasm", 1100.0),
+    ("firecracker", 800.0),
+    ("gvisor", 800.0),
+]
+
+
+def _runtime(backend, seed=0, n_cores=10, **kw):
+    sim = Simulator(seed=seed)
+    rt = FaasdRuntime(sim, backend=backend, n_cores=n_cores, **kw)
+    rt.deploy_blocking(FunctionSpec(name="aes"))
+    return rt
+
+
+def _both(backend, load, seed=0, observer=None, **kw):
+    out = {}
+    for engine in ("process", "events"):
+        rt = _runtime(backend, seed=seed, **kw)
+        out[engine] = drive(rt, load, observer=observer, engine=engine)
+    return out["process"], out["events"]
+
+
+def _assert_close(ref, fast):
+    assert fast["n"] == ref["n"]                    # same arrival stream
+    assert fast["rejected"] == ref["rejected"]
+    assert fast["achieved_rps"] == pytest.approx(ref["achieved_rps"],
+                                                 rel=0.02)
+    assert fast["median_ms"] == pytest.approx(ref["median_ms"], rel=0.12)
+    assert fast["p99_ms"] == pytest.approx(ref["p99_ms"], rel=0.35)
+    assert fast["completed_frac"] == pytest.approx(ref["completed_frac"],
+                                                   abs=0.03)
+
+
+@pytest.mark.parametrize("backend,rate", BACKENDS_AND_RATES)
+def test_engines_agree_poisson_all_backends(backend, rate):
+    load = LoadSpec.single("aes", rate, duration_s=0.5)
+    ref, fast = _both(backend, load, seed=3)
+    _assert_close(ref, fast)
+
+
+@pytest.mark.parametrize("arrivals", [
+    PoissonArrivals(5000.0),
+    BurstyArrivals(base_rps=1500.0, burst_rps=9000.0),
+    DiurnalArrivals(mean_rate_rps=4000.0, period_s=0.5),
+    TraceReplay(trace_s=tuple(np.linspace(0.0, 0.499, 2500))),
+], ids=["poisson", "mmpp", "diurnal", "trace"])
+def test_engines_agree_across_arrival_processes(arrivals):
+    load = LoadSpec(arrivals=arrivals, functions=("aes",), duration_s=0.5)
+    ref, fast = _both("junctiond", load, seed=5)
+    _assert_close(ref, fast)
+
+
+def test_engines_agree_under_overload():
+    # deep overload: both engines must report the same collapse shape
+    load = LoadSpec.single("aes", 20000.0, duration_s=0.4,
+                           max_outstanding=2000)
+    ref, fast = _both("containerd", load, seed=1)
+    assert ref["completed_frac"] < 0.9
+    assert fast["completed_frac"] < 0.9
+    assert fast["completed_frac"] == pytest.approx(ref["completed_frac"],
+                                                   abs=0.06)
+    assert fast["completion_rps"] == pytest.approx(ref["completion_rps"],
+                                                   rel=0.15)
+    assert fast["rejected"] > 0 and ref["rejected"] > 0
+
+
+def test_engines_agree_on_knee_location():
+    def searcher(engine):
+        def probe(rate, phase):
+            rt = _runtime("containerd", seed=0)
+            d = 0.2 if phase == "bracket" else 0.4
+            return drive(rt, LoadSpec.single("aes", rate, duration_s=d),
+                         engine=engine)
+        return KneeSearch(probe, slo_p99_ms=10.0, rate0=1000.0).run()
+
+    ref = searcher("process")
+    fast = searcher("events")
+    assert fast.knee_rps == pytest.approx(ref.knee_rps, rel=0.20)
+
+
+def test_engines_agree_on_scale_event_stream():
+    def run(engine):
+        sim = Simulator(seed=7)
+        rt = FaasdRuntime(sim, backend="junctiond", n_cores=10)
+        rt.deploy_blocking(FunctionSpec(name="aes"))
+        asc = Autoscaler(sim, rt, QueueDepthPolicy())
+        asc.run()
+        load = LoadSpec(arrivals=BurstyArrivals(base_rps=500.0,
+                                                burst_rps=9000.0),
+                        functions=("aes",), duration_s=1.0)
+        drive(rt, load, observer=asc, engine=engine)
+        return asc.telemetry()
+
+    ref, fast = run("process"), run("events")
+    for key in ("n_scale_events", "n_up", "n_down", "n_aborted",
+                "cold_starts"):
+        assert fast[key] == ref[key], key
+    assert len(fast["reactions_ms"]) == len(ref["reactions_ms"])
+
+
+def test_fast_engine_is_deterministic():
+    def run():
+        rt = _runtime("junctiond", seed=11)
+        return drive(rt, LoadSpec.single("aes", 4000.0, duration_s=0.5))
+
+    a, b = run(), run()
+    assert a["latencies_ms"] == b["latencies_ms"]   # byte-identical
+    flat_a = {k: v for k, v in a.items() if isinstance(v, (int, float))}
+    flat_b = {k: v for k, v in b.items() if isinstance(v, (int, float))}
+    assert flat_a == flat_b
+
+
+def test_fast_engine_records_match_schema():
+    rt = _runtime("junctiond", seed=2)
+    res = drive(rt, LoadSpec.single("aes", 2000.0, duration_s=0.3))
+    assert res["n"] > 0
+    assert rt.records, "fast engine must append InvocationRecords"
+    r = rt.records[-1]
+    assert r.t_arrival < r.t_done
+    assert r.t_start_exec <= r.t_end_exec <= r.t_done
+    assert "aes" in res["per_fn"]
+    assert res["per_fn"]["aes"].n == res["n"]
+
+
+def test_uncached_resolve_falls_back_to_process_engine():
+    # the fast engine compiles the cached-resolve chain only; a runtime
+    # with the provider cache off must transparently take the generator
+    # path (observable: per-request cache misses instead of hits)
+    rt = _runtime("junctiond", seed=0, provider_cache=False)
+    res = drive(rt, LoadSpec.single("aes", 500.0, duration_s=0.3),
+                engine="events")
+    assert res["n"] > 0
+    assert rt.cache_misses > 0
+    assert rt.cache_hits == 0
+
+
+def test_drive_rejects_unknown_engine_and_function():
+    rt = _runtime("junctiond")
+    with pytest.raises(ValueError):
+        drive(rt, LoadSpec.single("aes", 100.0), engine="threads")
+    with pytest.raises(KeyError):
+        drive(rt, LoadSpec.single("nope", 100.0))
+
+
+def test_observer_sees_every_admitted_request():
+    seen = {"arr": 0, "done": 0}
+
+    class Counter:
+        def on_arrival(self, fn):
+            seen["arr"] += 1
+
+        def on_done(self, fn):
+            seen["done"] += 1
+
+    rt = _runtime("junctiond", seed=4)
+    res = drive(rt, LoadSpec.single("aes", 2000.0, duration_s=0.4),
+                observer=Counter())
+    assert seen["arr"] > 0
+    assert seen["arr"] == seen["done"]              # moderate load drains
+    assert isinstance(NullObserver(), object)       # default is a no-op
+    assert res["rejected"] == 0
+
+
+def test_legacy_shims_delegate_and_warn():
+    rt = _runtime("junctiond", seed=6)
+    with pytest.warns(DeprecationWarning):
+        legacy = run_open_loop(rt, "aes", rate_rps=1500.0, duration_s=0.4)
+    assert legacy["offered_rps"] == 1500.0          # nominal, as before
+    assert legacy["n"] > 0
+
+    rt2 = _runtime("junctiond", seed=6)
+    with pytest.warns(DeprecationWarning):
+        mixed = run_mixed_open_loop(rt2, ["aes"], [1.0],
+                                    PoissonArrivals(1500.0), duration_s=0.4)
+    assert mixed["n"] > 0
+    for key in ("achieved_rps", "completion_rps", "median_ms", "p99_ms",
+                "completed_frac", "rejected", "per_fn", "latencies_ms"):
+        assert key in mixed, key
+
+
+def test_loadspec_validation_and_defaults():
+    with pytest.raises(ValueError):
+        LoadSpec(arrivals=PoissonArrivals(10.0), functions=())
+    with pytest.raises(ValueError):
+        LoadSpec(arrivals=PoissonArrivals(10.0), functions=("a",),
+                 weights=(0.5, 0.5))
+    spec = LoadSpec.single("aes", 100.0, duration_s=2.0)
+    assert spec.effective_warmup_s == pytest.approx(0.4)
+    abs_spec = LoadSpec.single("aes", 100.0, duration_s=2.0, warmup_s=0.3)
+    assert abs_spec.effective_warmup_s == 0.3
+    w = spec.normalized_weights()
+    assert w.sum() == pytest.approx(1.0)
+
+
+def test_heavy_tailed_work_batch_sampler():
+    rng = np.random.default_rng(0)
+    sampler = heavy_tailed_work(rng, median_us=95.0, cap_mult=10.0)
+    batch = sampler.sample(20000)
+    assert batch.shape == (20000,)
+    assert float(np.median(batch)) == pytest.approx(95.0, rel=0.05)
+    assert batch.max() <= 95.0 * 10.0 + 1e-9
+    # scalar and batch draws come from the same distribution
+    scalars = np.array([sampler() for _ in range(20000)])
+    assert float(np.median(scalars)) == pytest.approx(95.0, rel=0.05)
+    # deterministic under a fixed seed
+    a = heavy_tailed_work(np.random.default_rng(1), 95.0).sample(100)
+    b = heavy_tailed_work(np.random.default_rng(1), 95.0).sample(100)
+    assert np.array_equal(a, b)
+
+
+def test_event_loop_merges_arrivals_in_time_order():
+    sim = Simulator(seed=0)
+    order = []
+    sim._schedule(0.15, order.append, ("heap", 0.15))
+    sim._schedule(0.25, order.append, ("heap", 0.25))
+    loop = EventLoop(sim)
+    n = loop.run(1.0, [0.1, 0.2, 0.3],
+                 lambda i, t: order.append(("arrival", t)))
+    assert n == 3
+    assert order == [("arrival", 0.1), ("heap", 0.15), ("arrival", 0.2),
+                     ("heap", 0.25), ("arrival", 0.3)]
+    assert sim.now == 1.0                           # clock lands on `until`
+
+
+def test_event_loop_stops_delivering_past_until():
+    sim = Simulator(seed=0)
+    seen = []
+    loop = EventLoop(sim)
+    n = loop.run(0.5, [0.1, 0.4, 0.7], lambda i, t: seen.append(t))
+    assert n == 2 and seen == [0.1, 0.4]
+    # the undelivered arrival stays undelivered; heap events beyond
+    # `until` stay queued (Simulator.run semantics)
+    assert sim.now == 0.5
+
+
+def test_mixed_function_load_routes_by_weights():
+    sim = Simulator(seed=9)
+    rt = FaasdRuntime(sim, backend="junctiond", n_cores=10)
+    rt.deploy_blocking(FunctionSpec(name="a", work_us=80.0))
+    rt.deploy_blocking(FunctionSpec(name="b", work_us=400.0))
+    load = LoadSpec(arrivals=PoissonArrivals(2000.0), functions=("a", "b"),
+                    weights=(0.8, 0.2), duration_s=0.5)
+    res = drive(rt, load)
+    assert set(res["per_fn"]) == {"a", "b"}
+    assert res["per_fn"]["a"].n > 2 * res["per_fn"]["b"].n
+    assert res["per_fn"]["b"].median_ms > res["per_fn"]["a"].median_ms
