@@ -15,7 +15,9 @@ Two families of suites:
 * ``--suite legacy`` (default) — the original one-module-per-figure
   benches, printing ``name,value,derived`` CSV.
 * ``--list`` — enumerate registered backends and scenarios (names, modes,
-  rate grids) without running anything.
+  rate grids; fleet scenarios additionally show their simulated worker
+  count, placement policies and image-distribution strategies) without
+  running anything.
 
 Exit status is nonzero when any bench or scenario cell fails.
 
@@ -176,7 +178,8 @@ def run_list(args) -> int:
         asc = sc.autoscaler.policy if sc.autoscaler else "-"
         search = sc.search_spec()
         load = "search" if search is not None else \
-            "grid" if sc.mode in ("open", "mixed") and sc.rates else "-"
+            "grid" if sc.mode in ("open", "mixed", "fleet") and sc.rates \
+            else "-"
         print(f"  {name:17s} mode={sc.mode:6s} arrival={sc.arrival.kind:8s} "
               f"load={load:6s} backends={','.join(sc.backends)} "
               f"claims={sc.claims_kind or '-'} autoscaler={asc}")
@@ -187,9 +190,19 @@ def run_list(args) -> int:
                   f"{search.smoke_max_probes}) "
                   f"growth={search.growth:g} "
                   f"rate0={'auto' if search.rate0 is None else search.rate0}")
-        elif sc.mode in ("open", "mixed") and sc.rates:
+        elif sc.mode in ("open", "mixed", "fleet") and sc.rates:
+            unit = " rps/worker" if sc.mode == "fleet" else ""
             for b, grid in sorted(sc.rates.items()):
-                print(f"    rates[{b}] = {', '.join(f'{r:g}' for r in grid)}")
+                print(f"    rates[{b}] = "
+                      f"{', '.join(f'{r:g}' for r in grid)}{unit}")
+        if sc.fleet is not None:
+            fl = sc.fleet
+            storm = (f" storm={fl.storm_replicas}r@"
+                     f"{fl.storm_t_frac:g}T" if fl.storm_replicas else "")
+            print(f"    fleet: workers={fl.n_workers} "
+                  f"placement={'/'.join(fl.placements())} "
+                  f"distribution={'/'.join(fl.distributions())} "
+                  f"spread={fl.spread} image={fl.image_mb:g}MB{storm}")
     print("\nsuites:")
     for suite, names in sorted(SUITES.items()):
         print(f"  {suite:10s} = {', '.join(names)}")
@@ -249,6 +262,12 @@ def run_scenarios(args) -> int:
                 a = res["autoscaler"]
                 bits.append(f"scale_events={a['n_scale_events']} "
                             f"reaction_p50={a['reaction_p50_ms']:.1f}ms")
+            if "fleet" in res:
+                fl = res["fleet"]
+                bits.append(f"workers={fl['n_workers']}x{fl['placement']}")
+                spd = fl.get("tree_provisioning_speedup")
+                if spd is not None:
+                    bits.append(f"tree_speedup={spd:g}x")
             bits.append(f"[{res.get('elapsed_s', 0):.1f}s]")
             print(f"  {backend:11s} " + " ".join(bits))
         for key, cl in entry.get("claims", {}).items():
@@ -284,8 +303,11 @@ def main(argv=None) -> int:
                     help="duration scale factor on top of the suite default "
                          "(smoke already applies %.2fx)" % SMOKE_DURATION_SCALE)
     ap.add_argument("--workers", type=int, default=0, metavar="N",
-                    help="parallel worker processes for scenario suites "
-                         "(0 = in-process, deterministic ordering)")
+                    help="parallel OS processes the harness farms scenario "
+                         "cells out to (0 = in-process, deterministic "
+                         "ordering); unrelated to a fleet scenario's "
+                         "simulated worker count, which is fixed by its "
+                         "FleetSpec.n_workers (see --list)")
     ap.add_argument("--backends", metavar="A,B,...", default=None,
                     help="comma-separated registered backend names to run "
                          "every scenario against (default: each scenario's "

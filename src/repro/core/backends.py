@@ -99,9 +99,16 @@ class SnapshotColdStartModel(ColdStartModel):
     from the restore path** (scale-ups always run against a snapshot the
     deploy already warmed); callers pass ``restore_ms`` and cannot
     desynchronise the marginal replica cost from it.
+
+    ``save_ms`` is the snapshot-warming surcharge the *boot* path pays
+    (pause the VM, serialize memory + device state) before the cache
+    can serve restores: a full boot costs ``boot_seconds`` =
+    ``deploy_seconds + save_seconds``, and boot-without-save
+    (``deploy_seconds``) is the floor the conformance suite pins.
     """
     restore_ms: float = 0.0
     scale_factor: float = dataclasses.field(default=0.0, kw_only=True)
+    save_ms: float = 0.0
 
     def __post_init__(self):
         if not 0 < self.restore_ms < self.deploy_ms:
@@ -109,12 +116,24 @@ class SnapshotColdStartModel(ColdStartModel):
                 f"restore_ms must be in (0, deploy_ms={self.deploy_ms}), "
                 f"got {self.restore_ms} — a snapshot restore is the cheap "
                 "mode of a two-mode cold start")
+        if self.save_ms < 0:
+            raise ValueError(
+                f"save_ms must be >= 0, got {self.save_ms}")
         object.__setattr__(self, "scale_factor",
                            self.restore_ms / self.deploy_ms)
 
     @property
     def restore_seconds(self) -> float:
         return self.restore_ms * 1e-3
+
+    @property
+    def save_seconds(self) -> float:
+        return self.save_ms * 1e-3
+
+    @property
+    def boot_seconds(self) -> float:
+        """Full first boot: sandbox bring-up plus snapshot warming."""
+        return (self.deploy_ms + self.save_ms) * 1e-3
 
     @property
     def scale_seconds(self) -> float:

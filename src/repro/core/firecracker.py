@@ -27,6 +27,7 @@ from repro.core.backends import SnapshotColdStartModel, register_backend
 from repro.core.containerd import Containerd, ContainerRecord
 from repro.core.latency import (FIRECRACKER_BOOT_MS, FIRECRACKER_QUERY_MS,
                                 FIRECRACKER_RESTORE_MS, FIRECRACKER_RUNTIME,
+                                FIRECRACKER_SNAPSHOT_SAVE_MS,
                                 FIRECRACKER_STACK)
 from repro.core.scheduler import PollingModel
 from repro.core.simulator import Simulator
@@ -99,7 +100,8 @@ class Firecracker(Containerd):
     coldstart = SnapshotColdStartModel(
         deploy_ms=FIRECRACKER_BOOT_MS,
         query_ms=FIRECRACKER_QUERY_MS,
-        restore_ms=FIRECRACKER_RESTORE_MS)
+        restore_ms=FIRECRACKER_RESTORE_MS,
+        save_ms=FIRECRACKER_SNAPSHOT_SAVE_MS)
 
     def __init__(self, sim: Simulator, *, n_cores: int = 10,
                  polling_model: PollingModel = PollingModel.CENTRALIZED,
@@ -117,7 +119,9 @@ class Firecracker(Containerd):
             yield self.sim.timeout(self.coldstart.restore_seconds)
             self.restores += 1
             return True
-        yield self.sim.timeout(self.coldstart.deploy_seconds)
+        # full boot + snapshot save: warming the cache costs extra over
+        # a bare boot (pause + serialize memory/device state)
+        yield self.sim.timeout(self.coldstart.boot_seconds)
         self.snapshots.put(Snapshot(fn=fn_name, taken_at=self.sim.now))
         self.boots += 1
         return False

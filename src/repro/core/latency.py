@@ -275,7 +275,11 @@ WASM_COLDSTART_MS = 0.6
 WASM_QUERY_MS = 0.4
 # Firecracker: full microVM boot (VMM init + guest kernel + init) vs
 # restoring a pre-warmed memory/device snapshot of the booted guest.
+# Warming the snapshot is not free: the first boot also pauses the VM
+# and serializes guest memory + device state to disk before the cache
+# can serve restores.
 FIRECRACKER_BOOT_MS = 125.0
+FIRECRACKER_SNAPSHOT_SAVE_MS = 60.0
 FIRECRACKER_RESTORE_MS = 5.0
 FIRECRACKER_QUERY_MS = 1.6
 # gVisor: runsc create + Sentry boot — no guest Linux kernel to bring up,

@@ -412,6 +412,13 @@ def drive(runtime: FaasdRuntime, load: LoadSpec,
         if fn not in runtime.functions:
             raise KeyError(f"function {fn!r} not deployed")
     obs = observer if observer is not None else _NULL_OBSERVER
+    if getattr(runtime, "is_cluster", False):
+        # a fleet Cluster quacks like a runtime but routes per-arrival
+        # through its gateway; only the event engine drives fleets
+        if engine != "events":
+            raise ValueError("a Cluster only runs on the event engine")
+        from repro.fleet.driver import drive_cluster
+        return drive_cluster(runtime, load, obs)
     if engine == "events" and not _fast_capable(runtime, load):
         engine = "process"
     if engine == "events":

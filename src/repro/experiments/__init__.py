@@ -8,15 +8,16 @@ from repro.experiments.artifacts import (build_artifact, latency_histogram,
 from repro.experiments.runner import ExperimentRunner
 from repro.experiments.scenario import (DEFAULT_BACKENDS,
                                         DEFAULT_CLAIMS_PAIR, ArrivalSpec,
-                                        AutoscalerSpec, FunctionProfile,
-                                        Scenario, SearchSpec, zipf_mix)
+                                        AutoscalerSpec, FleetSpec,
+                                        FunctionProfile, Scenario, SearchSpec,
+                                        zipf_mix)
 from repro.experiments.suites import (SMOKE_DURATION_SCALE, SUITES,
                                       build_scenarios, get_scenario,
                                       get_suite)
 
 __all__ = [
-    "ArrivalSpec", "AutoscalerSpec", "FunctionProfile", "Scenario",
-    "SearchSpec", "zipf_mix",
+    "ArrivalSpec", "AutoscalerSpec", "FleetSpec", "FunctionProfile",
+    "Scenario", "SearchSpec", "zipf_mix",
     "DEFAULT_BACKENDS", "DEFAULT_CLAIMS_PAIR",
     "ExperimentRunner",
     "build_artifact", "latency_histogram", "metric_row", "metrics_csv",

@@ -30,8 +30,15 @@ import numpy as np
 # traces); grid-mode results carry none.  Either way the representative
 # latency row is tracked by index (``knee_row``), never by re-matching
 # the knee rate by float equality.
-SCHEMA_VERSION = 4
-_SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3, 4)
+# v5: fleet mode — a per-backend result may carry a ``fleet`` block
+# (cluster size, primary placement/distribution, per-variant results
+# over the placement x distribution grid, each with a per-worker
+# telemetry list: placement counts, latency percentiles, storm pull
+# timelines, autoscaler reaction summaries).  When the scenario compares
+# tree vs naive distribution the block also carries
+# ``tree_provisioning_speedup`` (naive/tree time-to-full-capacity).
+SCHEMA_VERSION = 5
+_SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3, 4, 5)
 
 _REQUIRED_TOP = ("schema_version", "suite", "duration_scale", "scenarios",
                  "metrics", "failures", "meta")
@@ -42,6 +49,9 @@ _REQUIRED_AUTOSCALER = ("policy", "n_scale_events", "cold_starts",
                         "cold_path_arrivals", "reaction_p50_ms")
 _REQUIRED_SEARCH = ("spec", "n_probes", "knee_rps_per_seed", "converged",
                     "trace")
+_REQUIRED_FLEET = ("n_workers", "placement", "distribution", "variants")
+_REQUIRED_FLEET_VARIANT = ("placement", "distribution", "workers")
+_REQUIRED_FLEET_WORKER = ("worker", "n", "placements")
 
 
 def latency_histogram(lat_ms: Sequence[float], n_bins: int = 24) -> Dict[str, list]:
@@ -80,6 +90,37 @@ def build_artifact(suite: str, scenarios: List[Dict[str, object]],
     }
 
 
+def _fleet_problems(fleet: object) -> List[str]:
+    """Schema problems inside one per-backend ``fleet`` block (v5)."""
+    if not isinstance(fleet, dict):
+        return [".fleet must be an object"]
+    probs = [f".fleet missing {key!r}"
+             for key in _REQUIRED_FLEET if key not in fleet]
+    variants = fleet.get("variants")
+    if variants is None:
+        return probs
+    if not isinstance(variants, list):
+        return probs + [".fleet.variants must be a list"]
+    for j, var in enumerate(variants):
+        if not isinstance(var, dict):
+            probs.append(f".fleet.variants[{j}] must be an object")
+            continue
+        probs.extend(f".fleet.variants[{j}] missing {key!r}"
+                     for key in _REQUIRED_FLEET_VARIANT if key not in var)
+        workers = var.get("workers")
+        if workers is None:
+            continue
+        if not isinstance(workers, list):
+            probs.append(f".fleet.variants[{j}].workers must be a list")
+            continue
+        for k, w in enumerate(workers):
+            if not isinstance(w, dict) or any(key not in w
+                                              for key in _REQUIRED_FLEET_WORKER):
+                probs.append(f".fleet.variants[{j}].workers[{k}] must have "
+                             f"keys {_REQUIRED_FLEET_WORKER}")
+    return probs
+
+
 def validate_artifact(doc: Dict[str, object]) -> None:
     """Raise ValueError describing every schema violation found."""
     problems: List[str] = []
@@ -113,7 +154,7 @@ def validate_artifact(doc: Dict[str, object]) -> None:
                                         "must be an object")
                         continue
                     asc = res.get("autoscaler")
-                    if version in (3, 4) and asc is not None:
+                    if version in (3, 4, 5) and asc is not None:
                         if not isinstance(asc, dict):
                             problems.append(f"scenarios[{i}].backends[{b}]"
                                             ".autoscaler must be an object")
@@ -124,7 +165,7 @@ def validate_artifact(doc: Dict[str, object]) -> None:
                                         f"scenarios[{i}].backends[{b}]"
                                         f".autoscaler missing {key!r}")
                     search = res.get("search")
-                    if version == 4 and search is not None:
+                    if version in (4, 5) and search is not None:
                         if not isinstance(search, dict):
                             problems.append(f"scenarios[{i}].backends[{b}]"
                                             ".search must be an object")
@@ -134,6 +175,11 @@ def validate_artifact(doc: Dict[str, object]) -> None:
                                     problems.append(
                                         f"scenarios[{i}].backends[{b}]"
                                         f".search missing {key!r}")
+                    fleet = res.get("fleet")
+                    if version == 5 and fleet is not None:
+                        problems.extend(
+                            f"scenarios[{i}].backends[{b}]{p}"
+                            for p in _fleet_problems(fleet))
             else:
                 problems.append(f"scenarios[{i}].backends must be an object")
             backend_set = sc.get("backend_set")

@@ -25,8 +25,9 @@ from repro.core.workload import (KneeSearch, LatencySummary, drive,
                                  knee_of_curve, percentile, run_sequential)
 from repro.experiments.artifacts import (build_artifact, latency_histogram,
                                          metric_row)
-from repro.experiments.scenario import (FunctionProfile, Scenario,
+from repro.experiments.scenario import (FleetSpec, FunctionProfile, Scenario,
                                         SearchSpec)
+from repro.fleet import Cluster
 
 PAPER_FIG5 = {"e2e_median": 37.33, "e2e_p99": 63.42,
               "exec_median": 35.3, "exec_p99": 81.0}
@@ -521,8 +522,221 @@ def _exec_mixed(sc: Scenario, backend: str, duration_scale: float,
     return out
 
 
+def _fleet_warm_targets(sc: Scenario, spec: FleetSpec) -> Dict[str, object]:
+    """Per-function worker subsets for the warm mix.
+
+    ``spread="all"`` puts every function everywhere (None = all
+    workers).  ``spread="zipf"`` gives the rank-r function a contiguous
+    worker block sized by its popularity share (min 2 workers for
+    redundancy), rotated per rank so the blocks interleave instead of
+    piling onto worker 0."""
+    if spec.spread == "all":
+        return {prof.name: None for prof in sc.functions}
+    n = spec.n_workers
+    w_max = max(p.weight for p in sc.functions)
+    out: Dict[str, object] = {}
+    for r, prof in enumerate(sc.functions):
+        k = max(2, min(n, int(round(n * prof.weight / w_max))))
+        start = (r * 7) % n
+        out[prof.name] = [(start + j) % n for j in range(k)]
+    return out
+
+
+def _fleet_run(sc: Scenario, backend: str, seed: int, placement: str,
+               distribution: str, rate: float, duration: float,
+               spec: FleetSpec,
+               targets: Dict[str, object]) -> Dict[str, object]:
+    """One (placement, distribution, seed) fleet run: deploy the warm
+    mix, drive gateway-routed traffic, optionally land a provisioning
+    storm mid-run (completing it past the drive window if needed)."""
+    sim = Simulator(seed=seed)
+    cluster = Cluster(
+        sim, spec.n_workers, backend=backend, n_cores=sc.n_cores,
+        placement=placement, distribution=distribution,
+        image_mb=spec.image_mb, origin_gbps=spec.origin_gbps,
+        peer_gbps=spec.peer_gbps, fanout=spec.fanout,
+        spill_load=spec.spill_load,
+        scale_policy=sc.autoscaler.build if sc.autoscaler else None)
+    for prof in sc.functions:
+        work = prof.work_us
+        if prof.heavy_tail_alpha is not None:
+            work = heavy_tailed_work(sim.rng, prof.work_us,
+                                     alpha=prof.heavy_tail_alpha)
+        cluster.deploy_blocking(
+            FunctionSpec(name=prof.name, work_us=work,
+                         payload_bytes=prof.payload_bytes,
+                         response_bytes=prof.response_bytes,
+                         scale=prof.scale, max_cores=prof.max_cores),
+            workers=targets[prof.name])
+    t0 = sim.now
+    storm_t = spec.storm_t_frac * duration
+    storm_proc = None
+    if spec.storm_replicas:
+        storm_fn = FunctionSpec(name="storm-fn", max_cores=2)
+
+        def launch():
+            yield sim.timeout(storm_t)
+            yield from cluster.scale_out(storm_fn, spec.storm_replicas)
+
+        storm_proc = sim.process(launch())
+    res = drive(cluster, sc.load_spec(rate, duration))
+    if storm_proc is not None and not storm_proc.done:
+        # a slow (naive) distribution can outlast the drive window: run
+        # the shared heap on until the storm lands so time-to-full is
+        # always measured, never truncated
+        storm_proc.completion.callbacks.append(lambda _v: sim.stop())
+        sim.run()
+        assert storm_proc.done, "provisioning storm did not converge"
+    out: Dict[str, object] = {
+        "n": res["n"], "median_ms": res["median_ms"],
+        "p99_ms": res["p99_ms"], "rejected": res["rejected"],
+        "latencies_ms": res["latencies_ms"],
+        "workers": res["fleet"]["workers"],
+        "expansions": len(res["fleet"]["expansions"]),
+    }
+    warmup = sc.warmup_frac * duration
+    if spec.storm_replicas:
+        storm = cluster.storms[-1]
+        t_end = storm["t_start_s"] + storm["time_to_full_s"]
+        warm_names = set(sc.fn_names())
+        warm = [r for w in cluster.workers for r in w.runtime.records
+                if r.fn in warm_names and r.t_arrival >= t0 + warmup]
+        before = [r.e2e * 1e3 for r in warm if r.t_arrival < t0 + storm_t]
+        during = [r.e2e * 1e3 for r in warm
+                  if t0 + storm_t <= r.t_arrival <= t_end]
+        p99_before = percentile(before, 99)
+        p99_during = percentile(during, 99)
+        warm_ok = (math.isfinite(p99_before) and p99_before > 0
+                   and math.isfinite(p99_during))
+        out.update({
+            "time_to_full_s": storm["time_to_full_s"],
+            "storm": storm,
+            "warm_p99_before_ms": p99_before,
+            "warm_p99_during_ms": p99_during,
+            "warm_p99_inflation": (p99_during / p99_before) if warm_ok
+            else float("nan"),
+            "insufficient_warm_samples": not warm_ok,
+        })
+        by_wid = {d["worker"]: d for d in storm["workers"]}
+        for blk in out["workers"]:
+            sd = by_wid.get(blk["worker"])
+            if sd is not None:
+                blk["storm_replicas"] = sd["replicas"]
+                blk["storm_pulled"] = sd["pulled"]
+                blk["storm_t_ready_s"] = sd["t_ready_s"]
+    if sc.autoscaler is not None:
+        tele = [w.autoscaler.telemetry() for w in cluster.workers]
+        out["autoscaler_runs"] = tele
+        for blk, t in zip(out["workers"], tele):
+            rx = t["reactions_ms"]
+            blk["reaction_p50_ms"] = (round(percentile(rx, 50), 3)
+                                      if rx else None)
+            blk["n_scale_events"] = t["n_scale_events"]
+    return out
+
+
+def _exec_fleet(sc: Scenario, backend: str, duration_scale: float,
+                smoke: bool) -> Dict[str, object]:
+    """Fleet mode: N workers behind a gateway, per-variant runs over the
+    (placement x distribution) grid from the scenario's FleetSpec.
+
+    ``rates[backend][0]`` is the per-worker warm rate; the gateway
+    admits ``rate * n_workers``.  The first (primary) variant provides
+    the scenario's headline latency stats; when the spec compares tree
+    vs naive distribution the fleet block carries
+    ``tree_provisioning_speedup`` (naive/tree time-to-full-capacity)."""
+    spec = sc.fleet or FleetSpec()
+    duration = max(0.5, sc.duration_s * duration_scale)
+    rates = sc.rates_for(backend, smoke=smoke)
+    if not rates:
+        raise ValueError(
+            f"scenario {sc.name!r} has no per-worker rate for backend "
+            f"{backend!r}; add rates[{backend!r}] or a '*' fallback")
+    per_worker_rps = float(rates[0])
+    rate = per_worker_rps * spec.n_workers
+    targets = _fleet_warm_targets(sc, spec)
+    variants: List[Dict[str, object]] = []
+    primary_lats: List[float] = []
+    for placement in spec.placements():
+        for distribution in spec.distributions():
+            per_seed: List[Dict[str, object]] = []
+            for seed in _seeds(sc, smoke):
+                per_seed.append(_fleet_run(sc, backend, seed, placement,
+                                           distribution, rate, duration,
+                                           spec, targets))
+            first = per_seed[0]
+            blk: Dict[str, object] = {
+                "placement": placement,
+                "distribution": distribution,
+                "n": int(sum(r["n"] for r in per_seed)),
+                "median_ms": _mean([r["median_ms"] for r in per_seed]),
+                "p99_ms": _mean([r["p99_ms"] for r in per_seed]),
+                "rejected": int(sum(r["rejected"] for r in per_seed)),
+                "expansions": int(sum(r["expansions"] for r in per_seed)),
+                "workers": first["workers"],    # per-worker telemetry
+            }
+            if spec.storm_replicas:
+                blk["time_to_full_s"] = _mean(
+                    [r["time_to_full_s"] for r in per_seed])
+                storm = dict(first["storm"])
+                storm["pulls"] = storm["pulls"][:2 * spec.n_workers]
+                blk["storm"] = storm
+                for key in ("warm_p99_before_ms", "warm_p99_during_ms",
+                            "warm_p99_inflation"):
+                    blk[key] = _finite_mean([r[key] for r in per_seed])
+                blk["insufficient_warm_samples"] = int(sum(
+                    r["insufficient_warm_samples"] for r in per_seed))
+            asc_runs = [t for r in per_seed
+                        for t in r.get("autoscaler_runs", ())]
+            if asc_runs:
+                blk["autoscaler"] = _pool_autoscaler(asc_runs)
+            if not variants:        # primary variant feeds the histogram
+                primary_lats = [x for r in per_seed
+                                for x in r["latencies_ms"]]
+            variants.append(blk)
+    primary = variants[0]
+    fleet: Dict[str, object] = {
+        "n_workers": spec.n_workers,
+        "placement": spec.placement,
+        "distribution": spec.distribution,
+        "spread": spec.spread,
+        "image_mb": spec.image_mb,
+        "storm_replicas": spec.storm_replicas,
+        "variants": variants,
+    }
+    if spec.storm_replicas:
+        by_dist = {v["distribution"]: v for v in variants
+                   if v["placement"] == spec.placement
+                   and "time_to_full_s" in v}
+        if "tree" in by_dist and "naive" in by_dist:
+            fleet["tree_provisioning_speedup"] = round(
+                by_dist["naive"]["time_to_full_s"]
+                / max(by_dist["tree"]["time_to_full_s"], 1e-9), 2)
+    out: Dict[str, object] = {
+        "mode": "fleet",
+        "duration_s": duration,
+        "arrival_kind": sc.arrival.kind,
+        "n_workers": spec.n_workers,
+        "warm_rps_per_worker": per_worker_rps,
+        "warm_rps": rate,
+        "n": primary["n"],
+        "median_ms": primary["median_ms"],
+        "p99_ms": primary["p99_ms"],
+        "hist": latency_histogram(primary_lats),
+        "fleet": fleet,
+    }
+    for key in ("warm_p99_before_ms", "warm_p99_during_ms",
+                "warm_p99_inflation", "insufficient_warm_samples",
+                "time_to_full_s"):
+        if key in primary:
+            out[key] = primary[key]
+    if "autoscaler" in primary:
+        out["autoscaler"] = primary["autoscaler"]
+    return out
+
+
 _MODES = {"closed": _exec_closed, "open": _exec_open, "storm": _exec_storm,
-          "mixed": _exec_mixed}
+          "mixed": _exec_mixed, "fleet": _exec_fleet}
 
 
 def _run_backend(item: Tuple[Scenario, str, float, bool]):
@@ -645,9 +859,44 @@ def _interference_claims(base: dict, treat: dict) -> Dict[str, dict]:
     }
 
 
+def _fleet_claims(base: dict, treat: dict) -> Dict[str, dict]:
+    """FaaSNet-regime provisioning claim: tree distribution's
+    time-to-full-capacity advantage over naive registry pulls during a
+    fleet-wide storm, while warm-path P99 stays flat.  The headline
+    speedup is the min over the claims pair — the gate holds for the
+    *worst* of the two backends, not a favorable one."""
+    b_fl, t_fl = base["fleet"], treat["fleet"]
+    b_spd = b_fl.get("tree_provisioning_speedup", float("nan"))
+    t_spd = t_fl.get("tree_provisioning_speedup", float("nan"))
+    headline = min(b_spd, t_spd)
+
+    def ttf(fl: dict, dist: str) -> float:
+        v = next((v for v in fl["variants"]
+                  if v["distribution"] == dist
+                  and v["placement"] == fl["placement"]), None)
+        return v.get("time_to_full_s", float("nan")) if v else float("nan")
+
+    inflation = _finite_mean([base.get("warm_p99_inflation", float("nan")),
+                              treat.get("warm_p99_inflation", float("nan"))])
+    return {
+        "fleet_tree_provisioning_speedup": {"measured": round(headline, 2)},
+        "baseline_tree_speedup": {"measured": round(b_spd, 2)},
+        "treatment_tree_speedup": {"measured": round(t_spd, 2)},
+        "baseline_tree_time_to_full_s": {
+            "measured": round(ttf(b_fl, "tree"), 4)},
+        "baseline_naive_time_to_full_s": {
+            "measured": round(ttf(b_fl, "naive"), 4)},
+        "treatment_tree_time_to_full_s": {
+            "measured": round(ttf(t_fl, "tree"), 4)},
+        "treatment_naive_time_to_full_s": {
+            "measured": round(ttf(t_fl, "naive"), 4)},
+        "fleet_warm_p99_inflation": {"measured": round(inflation, 3)},
+    }
+
+
 _CLAIMS = {"fig5": _fig5_claims, "fig6": _fig6_claims,
            "coldstart": _coldstart_claims, "autoscale": _autoscale_claims,
-           "interference": _interference_claims}
+           "interference": _interference_claims, "fleet": _fleet_claims}
 
 
 def _claim_metric_rows(sc: Scenario, backends: Dict[str, dict],
@@ -729,6 +978,23 @@ def _claim_metric_rows(sc: Scenario, backends: Dict[str, dict],
             metric_row("mixed_interference_reduction",
                        claims["interference_reduction"]["measured"],
                        f"x {base_name}/{treat_name} p99 inflation"),
+        ]
+    elif sc.claims_kind == "fleet":
+        rows += [
+            metric_row("fleet_tree_provisioning_speedup",
+                       claims["fleet_tree_provisioning_speedup"]["measured"],
+                       f"x naive/tree time-to-full, min over "
+                       f"({base_name}, {treat_name})"),
+            metric_row(f"fleet_{base_name}_tree_speedup",
+                       claims["baseline_tree_speedup"]["measured"],
+                       "x naive/tree time-to-full-capacity"),
+            metric_row(f"fleet_{treat_name}_tree_speedup",
+                       claims["treatment_tree_speedup"]["measured"],
+                       "x naive/tree time-to-full-capacity"),
+            metric_row("fleet_warm_p99_inflation",
+                       claims["fleet_warm_p99_inflation"]["measured"],
+                       "x warm p99 during/before the storm (tree, "
+                       "pair mean)"),
         ]
     return rows
 
@@ -826,6 +1092,32 @@ class ExperimentRunner:
                         f"scn_{sc.name}_{backend}_redeploy_speedup",
                         res["redeploy_speedup"],
                         "x first-deploy/redeploy (snapshot restore)"))
+                if res.get("mode") == "fleet":
+                    fl = res["fleet"]
+                    if "tree_provisioning_speedup" in fl:
+                        metrics.append(metric_row(
+                            f"scn_{sc.name}_{backend}_tree_provisioning"
+                            f"_speedup",
+                            fl["tree_provisioning_speedup"],
+                            "x naive/tree storm time-to-full"))
+                    for v in fl["variants"]:
+                        primary = (v["placement"] == fl["placement"]
+                                   and v["distribution"]
+                                   == fl["distribution"])
+                        # label each variant row by the axis it varies
+                        label = (v["placement"]
+                                 if v["placement"] != fl["placement"]
+                                 else v["distribution"])
+                        if "time_to_full_s" in v:
+                            metrics.append(metric_row(
+                                f"scn_{sc.name}_{backend}_"
+                                f"{v['distribution']}_time_to_full",
+                                v["time_to_full_s"] * 1e3,
+                                "ms storm time to full capacity"))
+                        if not primary and "time_to_full_s" not in v:
+                            metrics.append(metric_row(
+                                f"scn_{sc.name}_{backend}_{label}_p99",
+                                v["p99_ms"] * 1e3, "us (fleet variant)"))
             probes = sum(res["search"]["n_probes"]
                          for res in backends.values() if "search" in res)
             if probes:

@@ -158,6 +158,61 @@ class SearchSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """Fleet topology + provisioning model for ``mode="fleet"`` scenarios.
+
+    ``n_workers`` is the **simulated** cluster size (not the runner's
+    ``--workers`` process parallelism).  ``placement`` /
+    ``distribution`` name the primary gateway policy and image
+    distribution (see ``repro.fleet``); ``compare_*`` adds variants the
+    runner executes side by side, so one scenario can pit tree against
+    naive provisioning or least-loaded against locality placement.
+
+    A non-zero ``storm_replicas`` schedules a provisioning storm at
+    ``storm_t_frac`` of the run: that many replicas of a fresh function
+    spread across the fleet, every worker paying an image transfer
+    (``image_mb`` over ``origin_gbps``/``peer_gbps``) before its
+    backend's deploy path.  ``rates[backend]`` is interpreted
+    **per worker**; the gateway admits ``rate * n_workers``.
+
+    ``spread`` places the warm mix: ``"all"`` deploys every function on
+    every worker; ``"zipf"`` gives the rank-r function a
+    popularity-proportional worker subset (min 2), leaving the gateway's
+    pressure-driven expansion to widen hot functions mid-run.
+    ``spill_load`` is the outstanding-per-core threshold that triggers
+    expansion (``None`` disables it).
+    """
+    n_workers: int = 32
+    placement: str = "least-loaded"
+    compare_placements: Tuple[str, ...] = ()
+    distribution: str = "tree"
+    compare_distributions: Tuple[str, ...] = ()
+    storm_replicas: int = 0
+    storm_t_frac: float = 0.25
+    image_mb: float = 256.0
+    origin_gbps: float = 10.0
+    peer_gbps: float = 10.0
+    fanout: int = 2
+    spread: str = "all"            # "all" | "zipf"
+    spill_load: Optional[float] = 8.0
+
+    def __post_init__(self):
+        if self.n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {self.n_workers}")
+        if self.spread not in ("all", "zipf"):
+            raise ValueError(f"unknown spread {self.spread!r}")
+        if not 0.0 <= self.storm_t_frac < 1.0:
+            raise ValueError(
+                f"storm_t_frac must be in [0, 1), got {self.storm_t_frac}")
+
+    def placements(self) -> Tuple[str, ...]:
+        return (self.placement,) + tuple(self.compare_placements)
+
+    def distributions(self) -> Tuple[str, ...]:
+        return (self.distribution,) + tuple(self.compare_distributions)
+
+
+@dataclasses.dataclass(frozen=True)
 class Scenario:
     """A complete experiment: mix + arrivals + duration + backend matrix.
 
@@ -173,6 +228,11 @@ class Scenario:
       * ``mixed``  — steady warm traffic at ``rates[backend][0]`` plus a
         ``storm_functions`` provisioning storm on the same worker mid-run
         (warm-path interference; cold/warm path coupling).
+      * ``fleet``  — an N-worker cluster behind a gateway
+        (``repro.fleet``), topology from ``fleet``; warm traffic at
+        ``rates[backend][0]`` **per worker**, optional mid-run
+        provisioning storm with image distribution (FaaSNet regime),
+        placement/distribution variants side by side.
 
     An optional ``autoscaler`` spec puts a backend-aware autoscaler in
     the control loop of ``open``/``mixed`` runs; its scale-event
@@ -194,6 +254,7 @@ class Scenario:
     n_cores: int = 10
     slo_p99_ms: float = 10.0
     storm_functions: int = 16
+    fleet: Optional[FleetSpec] = None     # mode="fleet" topology
     autoscaler: Optional[AutoscalerSpec] = None
     backends: Tuple[str, ...] = DEFAULT_BACKENDS
     # (baseline, treatment) pair the paper-claim reductions are computed

@@ -17,7 +17,7 @@ from typing import Dict, List
 
 from repro.core.latency import AES_600B_WORK_US
 from repro.experiments.scenario import (ArrivalSpec, AutoscalerSpec,
-                                        FunctionProfile, Scenario,
+                                        FleetSpec, FunctionProfile, Scenario,
                                         SearchSpec, zipf_mix)
 
 # Open-mode scenarios default to the adaptive SLO-knee search (no
@@ -198,6 +198,45 @@ def build_scenarios() -> Dict[str, Scenario]:
             seeds=(0,), slo_p99_ms=15.0, claims_kind="interference",
             tags=("mixed", "coldstart", "autoscale", "provisioning")),
         Scenario(
+            name="fleet-storm",
+            description="32-worker fleet behind a gateway: a 1000-replica "
+                        "provisioning storm lands mid-run, FaaSNet tree "
+                        "distribution vs naive registry pulls, warm "
+                        "traffic riding along (rates are per worker)",
+            mode="fleet", functions=(FunctionProfile("aes", max_cores=8),),
+            arrival=ArrivalSpec("poisson"),
+            fleet=FleetSpec(n_workers=32, placement="least-loaded",
+                            distribution="tree",
+                            compare_distributions=("naive",),
+                            storm_replicas=1000, storm_t_frac=0.25),
+            rates={"containerd": (300.0,), "junctiond": (1200.0,),
+                   "quark": (220.0,), "wasm": (400.0,),
+                   "firecracker": (280.0,), "gvisor": (260.0,),
+                   "*": (300.0,)},
+            duration_s=4.0, warmup_frac=0.1, seeds=(0,), slo_p99_ms=15.0,
+            claims_kind="fleet",
+            tags=("fleet", "provisioning", "coldstart")),
+        Scenario(
+            name="fleet-zipf-diurnal",
+            description="Zipf(1.5) tenants with diurnal drift across a "
+                        "32-worker fleet, per-worker lead-time "
+                        "autoscalers; least-loaded vs round-robin vs "
+                        "locality placement (rates are per worker)",
+            mode="fleet", functions=zipf_mix(12, prefix="t"),
+            arrival=ArrivalSpec("diurnal", amplitude=0.8, period_s=0.5),
+            fleet=FleetSpec(n_workers=32, placement="least-loaded",
+                            compare_placements=("round-robin", "locality"),
+                            distribution="tree", spread="zipf"),
+            autoscaler=AutoscalerSpec(policy="lead-time",
+                                      target_inflight_per_replica=2.0,
+                                      max_replicas=16),
+            rates={"containerd": (250.0,), "junctiond": (1000.0,),
+                   "quark": (180.0,), "wasm": (320.0,),
+                   "firecracker": (230.0,), "gvisor": (210.0,),
+                   "*": (250.0,)},
+            duration_s=2.0, warmup_frac=0.15, seeds=(0,), slo_p99_ms=25.0,
+            tags=("fleet", "multitenant", "diurnal", "autoscale")),
+        Scenario(
             name="model-endpoint",
             description="Model decode steps as junctiond functions: how "
                         "much of an ms-scale endpoint budget the FaaS "
@@ -217,16 +256,19 @@ SUITES: Dict[str, List[str]] = {
     "scenarios": ["paper-fig5", "paper-fig6", "cold-start-storm",
                   "multi-tenant-mix", "bursty-burst", "diurnal-drift",
                   "heavy-tail-mix", "trace-replay", "autoscale-burst",
-                  "autoscale-diurnal", "mixed-cold-warm", "model-endpoint"],
+                  "autoscale-diurnal", "mixed-cold-warm", "fleet-storm",
+                  "fleet-zipf-diurnal", "model-endpoint"],
     # short CI gate: same scenarios, smoke rates + scaled durations
     "smoke": ["paper-fig5", "paper-fig6", "cold-start-storm",
               "multi-tenant-mix", "bursty-burst", "diurnal-drift",
               "heavy-tail-mix", "autoscale-burst", "autoscale-diurnal",
-              "mixed-cold-warm", "model-endpoint"],
+              "mixed-cold-warm", "fleet-storm", "model-endpoint"],
     # just the paper's headline figures
     "paper": ["paper-fig5", "paper-fig6", "cold-start-storm"],
     # the control-plane trio (autoscaler-in-the-loop)
     "autoscale": ["autoscale-burst", "autoscale-diurnal", "mixed-cold-warm"],
+    # the fleet pair (gateway + N workers + image distribution)
+    "fleet": ["fleet-storm", "fleet-zipf-diurnal"],
 }
 
 SMOKE_DURATION_SCALE = 0.33

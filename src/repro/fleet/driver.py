@@ -1,0 +1,213 @@
+"""Fleet driver: the event-heap open loop over a Cluster.
+
+``drive(cluster, load)`` lands here (dispatched by
+:func:`repro.core.workload.drive`).  One shared arrival stream is
+sampled from the cluster simulator's rng, each arrival is routed to a
+worker by the gateway at admit time, and the invocation then runs the
+same hop-compressed station machine as the single-runtime event engine
+— against the *routed worker's* core pool, records, and net stack — so
+per-worker contention, thrash, and autoscaler signals stay faithful.
+
+Cost-table pre-sampling is global: same-backend workers share identical
+``InvocationPlan``\\ s, so the per-request hold/gap/off-path matrices are
+drawn once per function (one vectorized batch) regardless of fleet
+size.  Everything runs on the cluster's one clock and heap, so a
+same-seed fleet run is byte-identical.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.faas import InvocationPlan, InvocationRecord
+from repro.core.simulator import EventLoop
+from repro.core.workload import (LatencySummary, LoadSpec, NullObserver,
+                                 SimObserver, _completion_rps, percentile)
+from repro.fleet.cluster import Cluster
+
+
+def drive_cluster(cluster: Cluster, load: LoadSpec,
+                  obs: SimObserver) -> Dict[str, object]:
+    sim = cluster.sim
+    fn_names = load.functions
+    duration_s = load.duration_s
+    warmup_s = load.effective_warmup_s
+    drain_s = load.drain_s
+    max_out = load.max_outstanding
+    t0 = sim.now
+    rel = load.arrivals.times(sim.rng, duration_s)
+    n = len(rel)
+    if len(fn_names) > 1:
+        picks = sim.rng.choice(len(fn_names), size=n,
+                               p=load.normalized_weights())
+    else:
+        picks = np.zeros(n, dtype=np.intp)
+
+    H = np.empty((n, 3))            # station CPU holds
+    G = np.empty((n, 2))            # inter-station latency gaps
+    OFF = np.empty(n)               # merged off-path CPU job
+    EX = np.empty(n)                # exec-span approximation for records
+    stack_cpu = [0.0] * len(fn_names)
+    for f, nm in enumerate(fn_names):
+        mask = picks == f
+        m = int(mask.sum())
+        if m == 0:
+            continue
+        ref = cluster.reference_runtime(nm)
+        plan = ref.invocation_plan(nm)
+        h, g, off, ex, n_hic = plan.sample(sim.rng, m)
+        H[mask] = h
+        G[mask] = g
+        OFF[mask] = off
+        EX[mask] = ex
+        stack_cpu[f] = plan.stack_cpu_s
+        # hiccups are sampled per function batch, before routing is
+        # known; book them on the reference worker's stack
+        ref.stack.hiccups += n_hic
+
+    HL = H.tolist()
+    GL = G.tolist()
+    OFFL = OFF.tolist()
+    EXL = EX.tolist()
+    ATL = (t0 + rel).tolist()
+    picksL = picks.tolist()
+    ex_start = [0.0] * n
+    wid_of = [-1] * n               # routed worker per request
+
+    workers = cluster.workers
+    pools = [w.runtime.cores for w in workers]
+    route = cluster.gateway.route
+    heap = sim._heap
+    push = heapq.heappush
+    counter = sim._counter
+    st_weight = InvocationPlan.STATION_BACKLOG_WEIGHT
+    off_weight = InvocationPlan.OFFPATH_BACKLOG_WEIGHT
+    observed = not isinstance(obs, NullObserver)
+    autoscaled = any(w.autoscaler is not None for w in workers)
+    t_warm = t0 + warmup_s
+    outstanding = 0
+    admitted = 0
+    rejected0 = cluster.rejected
+    done_recs: List[InvocationRecord] = []
+    lat_by_worker: List[List[float]] = [[] for _ in workers]
+
+    def _grant(start, i, k):
+        pool = pools[wid_of[i]]
+        eff = HL[i][k] * pool.thrash()
+        push(heap, (start + eff, next(counter), _complete, (i, k, eff, start)))
+
+    def _off_grant(start, wid, off):
+        pool = pools[wid]
+        eff = off * pool.thrash()
+        push(heap, (start + eff, next(counter), _off_done, (wid, eff)))
+
+    def _off_done(wid, eff):
+        pools[wid].release_fast(eff)
+
+    def _complete(i, k, eff, start):
+        nonlocal outstanding
+        wid = wid_of[i]
+        pool = pools[wid]
+        pool.release_fast(eff)
+        now = start + eff
+        if k == 2:
+            outstanding -= 1
+            w = workers[wid]
+            w.outstanding -= 1
+            rec = InvocationRecord(fn=fn_names[picksL[i]], t_arrival=ATL[i])
+            rec.t_start_exec = ex_start[i]
+            rec.t_end_exec = ex_start[i] + EXL[i]
+            rec.t_done = now
+            w.runtime.records.append(rec)
+            done_recs.append(rec)
+            if ATL[i] >= t_warm:
+                lat_by_worker[wid].append((now - ATL[i]) * 1e3)
+            if autoscaled and w.autoscaler is not None:
+                w.autoscaler.on_done(rec.fn)
+            if observed:
+                obs.on_done(rec.fn)
+            return
+        if k == 0:
+            off = OFFL[i]
+            if off > 0.0:
+                pool.acquire_fast(now, _off_grant, (wid, off),
+                                  weight=off_weight)
+        else:
+            ex_start[i] = start
+        pool.acquire_fast(now + GL[i][k], _grant, (i, k + 1),
+                          weight=st_weight)
+
+    def _admit(i, t):
+        nonlocal outstanding, admitted
+        f = picksL[i]
+        if outstanding >= max_out:
+            cluster.rejected += 1
+            return
+        w = route(fn_names[f])
+        if w is None:
+            cluster.rejected += 1
+            return
+        wid_of[i] = w.wid
+        outstanding += 1
+        w.outstanding += 1
+        w.admitted += 1
+        if t >= t_warm:
+            admitted += 1
+        rt = w.runtime
+        rt.cache_hits += 1          # warm cached resolve per request
+        rt.stack.messages += 4
+        rt.stack.cpu_spent += stack_cpu[f]
+        if autoscaled and w.autoscaler is not None:
+            w.autoscaler.on_arrival(fn_names[f])
+        if observed:
+            obs.on_arrival(fn_names[f])
+        pools[w.wid].acquire_fast(t, _grant, (i, 0), weight=st_weight)
+
+    EventLoop(sim).run(t0 + duration_s + drain_s, ATL, _admit)
+
+    # -- assembly (mirrors workload._assemble over the fleet) -----------
+    recs = [r for r in done_recs if r.t_arrival >= t_warm]
+    done = [r for r in recs if r.t_done <= t0 + duration_s + drain_s]
+    lat = [r.e2e * 1e3 for r in recs]
+    summary = LatencySummary.of(lat)
+    per_fn: Dict[str, LatencySummary] = {}
+    for name in fn_names:
+        fn_lat = [r.e2e * 1e3 for r in recs if r.fn == name]
+        if fn_lat:
+            per_fn[name] = LatencySummary.of(fn_lat)
+    gw = cluster.gateway
+    worker_rows = []
+    for w in workers:
+        lats = lat_by_worker[w.wid]
+        worker_rows.append({
+            "worker": w.wid,
+            "n": len(lats),
+            "placements": gw.placements[w.wid],
+            "median_ms": round(percentile(lats, 50), 4) if lats else None,
+            "p99_ms": round(percentile(lats, 99), 4) if lats else None,
+        })
+    return {
+        "offered_rps": n / max(duration_s, 1e-9),
+        "achieved_rps": len(done) / max(1e-9, duration_s - warmup_s),
+        "completion_rps": _completion_rps(done, t0 + warmup_s,
+                                          t0 + duration_s),
+        "completed_frac": len(done) / max(1, admitted),
+        "median_ms": summary.median_ms,
+        "p99_ms": summary.p99_ms,
+        "mean_ms": summary.mean_ms,
+        "p999_ms": summary.p999_ms,
+        "n": summary.n,
+        "rejected": cluster.rejected - rejected0,
+        "per_fn": per_fn,
+        "latencies_ms": lat,
+        "fleet": {
+            "n_workers": len(workers),
+            "placement": gw.policy.kind,
+            "distribution": cluster.distribution.kind,
+            "workers": worker_rows,
+            "expansions": list(gw.expansions),
+        },
+    }

@@ -298,7 +298,7 @@ def test_autoscaler_spec_builds_policies():
 
 
 def test_schema_v3_validates_autoscaler_blocks():
-    assert SCHEMA_VERSION == 4
+    assert SCHEMA_VERSION == 5
     good_block = {"policy": "lead-time", "n_scale_events": 3,
                   "cold_starts": 2, "cold_path_arrivals": 5,
                   "reaction_p50_ms": 1.5}

@@ -268,6 +268,24 @@ def test_snapshot_remove_evicts_and_redeploy_rewarms(name):
     assert second < again
 
 
+@pytest.mark.parametrize("name", ALL_BACKENDS)
+def test_snapshot_boot_pays_the_save_charge(name):
+    """Warming the snapshot cache is not free: the first boot pays
+    deploy + save (boot_seconds), so boot >= boot-without-save
+    (deploy_seconds) always, strictly when the model charges a save."""
+    rt = _snapshotting(name)
+    cs = rt.backend.coldstart
+    first = _deploy_s(rt)
+    assert first == pytest.approx(cs.boot_seconds)
+    assert cs.boot_seconds >= cs.deploy_seconds   # boot >= boot-without-save
+    if cs.save_ms > 0:
+        assert first > cs.deploy_seconds
+        assert first == pytest.approx(cs.deploy_seconds + cs.save_seconds)
+    # the save charge lives on the boot path only: restores skip it
+    second = _deploy_s(rt)
+    assert second == pytest.approx(cs.restore_seconds)
+
+
 def test_firecracker_restore_is_an_order_faster_than_boot():
     rt = _runtime("firecracker")
     boot = _deploy_s(rt)
@@ -304,10 +322,11 @@ def test_firecracker_snapshot_cache_capacity_evicts_lru():
     assert "b" not in be.snapshots
     assert be.snapshots.evictions == 1
     # scaling b up after its snapshot was evicted re-boots (re-warming the
-    # cache) instead of restoring from a snapshot that no longer exists
+    # cache, save charge included) instead of restoring from a snapshot
+    # that no longer exists
     t0 = sim.now
     _drive(sim, be.scale("b", 2))
-    assert sim.now - t0 == pytest.approx(be.coldstart.deploy_seconds)
+    assert sim.now - t0 == pytest.approx(be.coldstart.boot_seconds)
     assert "b" in be.snapshots
 
 
@@ -505,9 +524,11 @@ def test_validate_artifact_accepts_v1_and_v2_schemas():
     validate_artifact(v2)
     v3 = dict(v2, schema_version=3)
     validate_artifact(v3)
-    v5 = dict(v1, schema_version=5)
+    v4 = dict(v2, schema_version=4)
+    validate_artifact(v4)
+    v6 = dict(v1, schema_version=6)
     with pytest.raises(ValueError, match="schema_version"):
-        validate_artifact(v5)
+        validate_artifact(v6)
 
 
 def test_rates_fall_back_to_wildcard_grid_with_warning():

@@ -1,0 +1,457 @@
+"""Fleet tier: cluster + gateway + placement + image distribution.
+
+Covers the pluggable registries (placement policies, distribution
+models), the SharedLink fluid model, FaaSNet tree vs naive registry
+provisioning (the >=3x storm claim CI gates on), gateway routing and
+pressure-driven expansion, the ``drive(cluster, load)`` path with its
+per-worker telemetry, same-seed byte-identical determinism — including
+a recorded trace split across N workers with no duplicated or dropped
+arrivals — and the schema-v5 fleet artifact contract.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.core import FaasdRuntime, FunctionSpec, LoadSpec, Simulator, drive
+from repro.core.workload import TraceReplay
+from repro.experiments import (FleetSpec, Scenario, build_artifact,
+                               validate_artifact)
+from repro.experiments.scenario import ArrivalSpec, FunctionProfile
+from repro.experiments.runner import _exec_fleet
+from repro.fleet import (Cluster, FaasNetTree, Gateway,
+                         LeastLoadedPlacement, LocalityPlacement,
+                         NaiveRegistryPull, RoundRobinPlacement, SharedLink,
+                         available_distributions, available_placements,
+                         resolve_distribution, resolve_placement)
+
+
+# ---------------------------------------------------------------------------
+# registries
+
+
+def test_placement_registry():
+    assert available_placements() == ["least-loaded", "locality",
+                                      "round-robin"]
+    pol = resolve_placement("round-robin")
+    assert isinstance(pol, RoundRobinPlacement)
+    # instances pass through; names mint fresh (stateful) instances
+    assert resolve_placement(pol) is pol
+    assert resolve_placement("round-robin") is not pol
+    with pytest.raises(ValueError, match="unknown placement"):
+        resolve_placement("bogus")
+
+
+def test_distribution_registry():
+    assert available_distributions() == ["naive", "tree"]
+    sim = Simulator()
+    assert isinstance(resolve_distribution("naive", sim), NaiveRegistryPull)
+    assert isinstance(resolve_distribution("tree", sim), FaasNetTree)
+    with pytest.raises(ValueError, match="unknown image distribution"):
+        resolve_distribution("bogus", sim)
+
+
+def test_distribution_parameter_validation():
+    sim = Simulator()
+    with pytest.raises(ValueError, match="bandwidth"):
+        SharedLink(sim, 0.0)
+    with pytest.raises(ValueError, match="fanout"):
+        FaasNetTree(sim, fanout=0)
+    with pytest.raises(ValueError, match="chunks"):
+        FaasNetTree(sim, chunks=0)
+
+
+# ---------------------------------------------------------------------------
+# SharedLink fluid model
+
+
+def test_shared_link_alone_runs_at_line_rate():
+    sim = Simulator()
+    link = SharedLink(sim, 8.0)            # 8 Gbps = 1e9 B/s
+    done = []
+    link.transfer(1e9).callbacks.append(lambda t: done.append(t))
+    sim.run()
+    assert done == [pytest.approx(1.0)]
+
+
+def test_shared_link_processor_sharing():
+    sim = Simulator()
+    link = SharedLink(sim, 8.0)
+    done = {}
+
+    def start(name, delay, nbytes):
+        def p():
+            if delay:
+                yield sim.timeout(delay)
+            yield link.transfer(nbytes)
+            done[name] = sim.now
+        sim.process(p())
+
+    # a runs alone for 0.5s (0.5e9 done), then shares with b: each
+    # drains at 0.5e9 B/s, so a lands at 1.5 and b runs the last
+    # 0.5e9 alone, landing at 2.0
+    start("a", 0.0, 1e9)
+    start("b", 0.5, 1e9)
+    sim.run()
+    assert done["a"] == pytest.approx(1.5)
+    assert done["b"] == pytest.approx(2.0)
+
+
+def test_shared_link_rejects_empty_transfer():
+    with pytest.raises(ValueError, match="transfer size"):
+        SharedLink(Simulator(), 8.0).transfer(0.0)
+
+
+# ---------------------------------------------------------------------------
+# placement policies (unit: fake workers)
+
+
+class _W:
+    def __init__(self, wid, load=0.0):
+        self.wid = wid
+        self.load = load
+
+
+def test_round_robin_cycles_per_function():
+    pol = RoundRobinPlacement()
+    ready = [_W(0), _W(1), _W(2)]
+    assert [pol.pick("f", ready).wid for _ in range(5)] == [0, 1, 2, 0, 1]
+    # an independent cursor per function
+    assert pol.pick("g", ready).wid == 0
+
+
+def test_least_loaded_prefers_min_load_and_rotates_ties():
+    pol = LeastLoadedPlacement()
+    ready = [_W(0, 1.0), _W(1, 0.0), _W(2, 0.0)]
+    picks = [pol.pick("f", ready).wid for _ in range(4)]
+    # never the loaded worker; the tie-break cursor rotates instead of
+    # herding onto the lowest id
+    assert 0 not in picks
+    assert set(picks) == {1, 2}
+
+
+def test_locality_is_sticky_until_spill():
+    pol = LocalityPlacement(spill_load=2.0)
+    ready = [_W(0), _W(1), _W(2), _W(3)]
+    home = pol.pick("fn-a", ready).wid
+    assert all(pol.pick("fn-a", ready).wid == home for _ in range(8))
+    # a different function may hash to a different home
+    ready[home].load = 5.0                 # saturate the home worker
+    spilled = pol.pick("fn-a", ready).wid
+    assert spilled != home
+
+
+# ---------------------------------------------------------------------------
+# provisioning storms: tree vs naive
+
+
+def _storm(distribution, n_workers=32, replicas=1000, seed=0,
+           backend="containerd"):
+    sim = Simulator(seed=seed)
+    cl = Cluster(sim, n_workers, backend=backend, distribution=distribution)
+    out = {}
+
+    def go():
+        rec = yield from cl.scale_out(FunctionSpec(name="storm-fn"),
+                                      replicas)
+        out.update(rec)
+        sim.stop()
+
+    sim.process(go())
+    sim.run()
+    assert out, "storm did not complete"
+    return out
+
+
+def test_tree_beats_naive_by_3x_at_storm_scale():
+    tree = _storm("tree")
+    naive = _storm("naive")
+    assert tree["time_to_full_s"] > 0
+    assert naive["time_to_full_s"] >= 3.0 * tree["time_to_full_s"], (
+        tree["time_to_full_s"], naive["time_to_full_s"])
+
+
+def test_storm_record_shape_and_pull_sources():
+    rec = _storm("tree", n_workers=8, replicas=64)
+    assert rec["n_workers"] == 8
+    assert sum(w["replicas"] for w in rec["workers"]) == 64
+    assert [w["worker"] for w in rec["workers"]] == list(range(8))
+    assert all(w["pulled"] for w in rec["workers"])
+    srcs = [p["source"] for p in rec["pulls"]]
+    assert srcs.count("origin") == 1       # only the root hits the registry
+    assert srcs.count("peer") == 7
+    naive = _storm("naive", n_workers=8, replicas=64)
+    assert all(p["source"] == "origin" for p in naive["pulls"])
+
+
+def test_storm_is_deterministic():
+    a = _storm("tree", n_workers=16, replicas=200, seed=3)
+    b = _storm("tree", n_workers=16, replicas=200, seed=3)
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_scale_out_validates_replicas():
+    sim = Simulator()
+    cl = Cluster(sim, 2)
+    with pytest.raises(ValueError, match="total_replicas"):
+        list(cl.scale_out(FunctionSpec(name="f"), 0))
+
+
+def test_warm_holders_seed_the_tree():
+    """A fetch onto a fleet that already holds the image somewhere must
+    stream from the warm peers, never the origin."""
+    sim = Simulator()
+    cl = Cluster(sim, 4, distribution="tree")
+    cl.deploy_blocking(FunctionSpec(name="aes"), workers=[0, 1])
+
+    def go():
+        yield from cl.provision(FunctionSpec(name="aes"), 2)
+        sim.stop()
+
+    sim.process(go())
+    sim.run()
+    assert [p["source"] for p in cl.distribution.pulls_for("aes")] == ["peer"]
+
+
+# ---------------------------------------------------------------------------
+# cluster + gateway
+
+
+def test_cluster_validates_size():
+    with pytest.raises(ValueError, match="n_workers"):
+        Cluster(Simulator(), 0)
+
+
+def test_deploy_blocking_marks_ready_without_pull_charge():
+    sim = Simulator()
+    cl = Cluster(sim, 4)
+    cl.deploy_blocking(FunctionSpec(name="aes"))
+    assert cl.ready["aes"] == [0, 1, 2, 3]
+    assert cl.holders("aes") == 4
+    assert cl.distribution.pulls == []     # pre-pulled: no transfer cost
+    assert isinstance(cl.reference_runtime("aes"), FaasdRuntime)
+
+
+def test_route_needs_a_ready_worker():
+    sim = Simulator()
+    cl = Cluster(sim, 2)
+    assert cl.gateway.route("nope") is None
+    with pytest.raises(KeyError):
+        cl.reference_runtime("nope")
+
+
+def test_gateway_routes_only_to_ready_subset_and_counts_placements():
+    sim = Simulator()
+    cl = Cluster(sim, 4, placement="round-robin", spill_load=None)
+    cl.deploy_blocking(FunctionSpec(name="aes"), workers=[1, 3])
+    wids = [cl.gateway.route("aes").wid for _ in range(6)]
+    assert set(wids) == {1, 3}
+    assert cl.gateway.placements == [0, 3, 0, 3]
+
+
+def test_gateway_expands_under_pressure():
+    sim = Simulator()
+    cl = Cluster(sim, 3, spill_load=1.0)
+    cl.deploy_blocking(FunctionSpec(name="aes"), workers=[0])
+    cl.workers[0].outstanding = 50         # saturate the only ready worker
+    w = cl.gateway.route("aes")
+    assert w.wid == 0                      # still served by the ready set
+    sim.run()                              # let the expansion land
+    assert len(cl.gateway.expansions) == 1
+    exp = cl.gateway.expansions[0]
+    assert exp["fn"] == "aes" and exp["worker"] in (1, 2)
+    assert exp["pulled"] and exp["ready_ms"] > 0
+    assert sorted(cl.ready["aes"]) == [0, exp["worker"]]
+
+
+# ---------------------------------------------------------------------------
+# drive(cluster, load)
+
+
+def _drive_fleet(seed=0, n_workers=4, placement="least-loaded",
+                 rate=400.0, duration_s=1.0):
+    sim = Simulator(seed=seed)
+    cl = Cluster(sim, n_workers, placement=placement)
+    cl.deploy_blocking(FunctionSpec(name="aes"))
+    res = drive(cl, LoadSpec.single("aes", rate, duration_s=duration_s))
+    return cl, res
+
+
+def test_drive_cluster_result_row_and_worker_telemetry():
+    cl, res = _drive_fleet()
+    fl = res["fleet"]
+    assert fl["n_workers"] == 4
+    assert fl["placement"] == "least-loaded"
+    assert fl["distribution"] == "tree"
+    assert len(fl["workers"]) == 4
+    assert res["rejected"] == 0
+    assert res["n"] > 0 and res["median_ms"] > 0
+    placed = sum(w["placements"] for w in fl["workers"])
+    assert placed == sum(w.admitted for w in cl.workers)
+    # least-loaded keeps the fleet balanced: no worker starves
+    assert all(w["n"] > 0 for w in fl["workers"])
+
+
+def test_drive_cluster_same_seed_is_byte_identical():
+    _, a = _drive_fleet(seed=7)
+    _, b = _drive_fleet(seed=7)
+    assert a["latencies_ms"] == b["latencies_ms"]
+    assert json.dumps(a["fleet"], sort_keys=True) == \
+        json.dumps(b["fleet"], sort_keys=True)
+
+
+def test_drive_cluster_rejects_process_engine():
+    sim = Simulator()
+    cl = Cluster(sim, 2)
+    cl.deploy_blocking(FunctionSpec(name="aes"))
+    load = LoadSpec.single("aes", 100.0, duration_s=0.5)
+    with pytest.raises(ValueError, match="event engine"):
+        drive(cl, load, engine="process")
+
+
+def test_drive_cluster_requires_deployed_functions():
+    sim = Simulator()
+    cl = Cluster(sim, 2)
+    with pytest.raises(KeyError, match="not deployed"):
+        drive(cl, LoadSpec.single("aes", 100.0, duration_s=0.5))
+
+
+# ---------------------------------------------------------------------------
+# trace replay split across N workers (gateway fan-out determinism)
+
+
+_TRACE = [i * 0.004 + (0.0007 * (i % 5)) for i in range(240)]
+
+
+class _SpyGateway(Gateway):
+    """Records every routing decision: (fn, arrival time, worker id)."""
+
+    __slots__ = ("routed",)
+
+    def __init__(self, cluster, policy, spill_load=None):
+        super().__init__(cluster, policy, spill_load)
+        self.routed = []
+
+    def route(self, fn):
+        w = super().route(fn)
+        self.routed.append((fn, round(self.cluster.sim.now, 9),
+                            None if w is None else w.wid))
+        return w
+
+
+def _drive_trace(seed=0, n_workers=4):
+    """Replay a fixed trace over a small fleet, spying on the gateway to
+    record the exact per-worker arrival streams."""
+    sim = Simulator(seed=seed)
+    cl = Cluster(sim, n_workers, placement="round-robin")
+    cl.gateway = _SpyGateway(cl, resolve_placement("round-robin"))
+    for fn in ("t0", "t1"):
+        cl.deploy_blocking(FunctionSpec(name=fn))
+    load = LoadSpec(arrivals=TraceReplay(trace_s=tuple(_TRACE)),
+                    functions=("t0", "t1"), duration_s=1.2)
+    t0 = sim.now                  # deploys already advanced the clock
+    res = drive(cl, load)
+    routed = [(fn, round(t - t0, 9), wid)
+              for fn, t, wid in cl.gateway.routed]
+    streams = {w.wid: [(fn, t) for fn, t, wid in routed if wid == w.wid]
+               for w in cl.workers}
+    return res, routed, streams
+
+
+def test_trace_split_same_seed_identical_per_worker_streams():
+    _, routed_a, streams_a = _drive_trace(seed=5)
+    _, routed_b, streams_b = _drive_trace(seed=5)
+    assert routed_a == routed_b
+    # byte-identical per-worker arrival streams, not just equal counts
+    assert json.dumps(streams_a, sort_keys=True, default=list) == \
+        json.dumps(streams_b, sort_keys=True, default=list)
+
+
+def test_trace_split_no_duplicated_or_dropped_arrivals():
+    res, routed, streams = _drive_trace()
+    assert res["rejected"] == 0
+    # every trace arrival admitted exactly once across the fleet
+    assert len(routed) == len(_TRACE)
+    assert sum(len(s) for s in streams.values()) == len(_TRACE)
+    times = sorted(t for s in streams.values() for _, t in s)
+    assert times == sorted(round(t, 9) for t in _TRACE)
+    # the split is a partition: each worker's stream is time-ordered
+    for s in streams.values():
+        ts = [t for _, t in s]
+        assert ts == sorted(ts)
+
+
+# ---------------------------------------------------------------------------
+# runner integration + schema v5
+
+
+def _fleet_scenario(**fleet_kw):
+    spec = FleetSpec(n_workers=4, placement="least-loaded",
+                     distribution="tree",
+                     compare_distributions=("naive",),
+                     storm_replicas=32, storm_t_frac=0.25, **fleet_kw)
+    return Scenario(
+        name="fleet-unit", description="unit fleet",
+        mode="fleet", functions=(FunctionProfile("aes"),),
+        arrival=ArrivalSpec("poisson"), fleet=spec,
+        rates={"*": (200.0,)}, duration_s=1.0, warmup_frac=0.1,
+        seeds=(0,), backends=("containerd",))
+
+
+def test_exec_fleet_builds_variant_grid_with_speedup():
+    res = _exec_fleet(_fleet_scenario(), "containerd",
+                      duration_scale=1.0, smoke=True)
+    fl = res["fleet"]
+    assert fl["n_workers"] == 4
+    assert [v["distribution"] for v in fl["variants"]] == ["tree", "naive"]
+    assert fl["tree_provisioning_speedup"] >= 1.0
+    for var in fl["variants"]:
+        assert len(var["workers"]) == 4
+        assert all("placements" in w and "n" in w for w in var["workers"])
+        assert var["time_to_full_s"] > 0
+        assert var["storm"]["pulls"], "storm pull timeline missing"
+        # the storm's per-worker merge lands in the worker blocks
+        assert all("storm_replicas" in w for w in var["workers"])
+    assert res["mode"] == "fleet" and res["n"] > 0
+
+
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError, match="n_workers"):
+        FleetSpec(n_workers=0)
+    with pytest.raises(ValueError, match="spread"):
+        FleetSpec(spread="uniform")
+    with pytest.raises(ValueError, match="storm_t_frac"):
+        FleetSpec(storm_t_frac=1.5)
+    spec = FleetSpec(compare_placements=("round-robin",))
+    assert spec.placements() == ("least-loaded", "round-robin")
+    assert spec.distributions() == ("tree",)
+
+
+def _doc_with_fleet(fleet):
+    return build_artifact("unit", [{
+        "name": "s", "mode": "fleet", "description": "d",
+        "backend_set": ["containerd"],
+        "backends": {"containerd": {"fleet": fleet}}}], [], [])
+
+
+def test_schema_v5_validates_fleet_blocks():
+    good = {"n_workers": 2, "placement": "least-loaded",
+            "distribution": "tree",
+            "variants": [{"placement": "least-loaded",
+                          "distribution": "tree",
+                          "workers": [{"worker": 0, "n": 1,
+                                       "placements": 1}]}]}
+    validate_artifact(_doc_with_fleet(good))
+
+    with pytest.raises(ValueError, match=r"fleet missing 'variants'"):
+        validate_artifact(_doc_with_fleet(
+            {"n_workers": 2, "placement": "p", "distribution": "d"}))
+    bad_variant = dict(good, variants=[{"placement": "p"}])
+    with pytest.raises(ValueError, match=r"variants\[0\] missing"):
+        validate_artifact(_doc_with_fleet(bad_variant))
+    bad_worker = dict(good, variants=[{
+        "placement": "p", "distribution": "d", "workers": [{"worker": 0}]}])
+    with pytest.raises(ValueError, match=r"workers\[0\] must have"):
+        validate_artifact(_doc_with_fleet(bad_worker))
+    with pytest.raises(ValueError, match="fleet must be an object"):
+        validate_artifact(_doc_with_fleet([1, 2]))
