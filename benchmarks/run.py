@@ -133,14 +133,51 @@ def measure_sim_throughput(duration_s: float = 8.0, rate_rps: float = 1200.0,
     return out
 
 
+def measure_fleet_sim_throughput(duration_s: float = 4.0,
+                                 rate_rps: float = 12000.0,
+                                 n_workers: int = 32,
+                                 backend: str = "containerd", seed: int = 0,
+                                 repeats: int = 3):
+    """Simulated-requests-per-wall-second of ``drive`` over the fleet
+    reference: a 32-worker containerd cluster behind one gateway, offered
+    an aggregate open-loop rate sized to the single-runtime reference
+    (1200 rps x ~10 workers' worth of headroom), least-loaded placement.
+
+    Same min-wall estimator as :func:`measure_sim_throughput`.  Returns
+    ``{"n", "wall_s", "sim_rps", "per_worker_rps"}`` where
+    ``per_worker_rps`` normalises by the fleet size — the
+    machine-portable sanity figure (routing + per-worker pools cost a
+    bounded factor over the single-runtime driver, not a per-worker
+    slowdown)."""
+    from repro.core import FunctionSpec, LoadSpec, Simulator, drive
+    from repro.fleet import Cluster
+    wall, n = float("inf"), 0
+    for _ in range(max(1, 2 * repeats + 1)):
+        sim = Simulator(seed=seed)
+        cl = Cluster(sim, n_workers, backend=backend)
+        cl.deploy_blocking(FunctionSpec(name="aes"))
+        load = LoadSpec.single("aes", rate_rps, duration_s=duration_s)
+        t0 = time.perf_counter()
+        res = drive(cl, load)
+        wall = min(wall, max(time.perf_counter() - t0, 1e-9))
+        n = res["n"]
+    return {"n": n, "wall_s": wall, "sim_rps": n / wall,
+            "per_worker_rps": n / wall / n_workers}
+
+
 def run_sim_throughput(doc=None) -> dict:
-    """Measure, print the stable one-line summary CI greps, and (when an
-    artifact dict is given) append the metric rows."""
+    """Measure, print the stable one-line summaries CI greps, and (when
+    an artifact dict is given) append the metric rows."""
     m = measure_sim_throughput()
     ev, pr = m["events"], m["process"]
     print(f"sim_throughput: events={ev['sim_rps']:.0f} req/s "
           f"process={pr['sim_rps']:.0f} req/s speedup={m['speedup']:.1f}x "
           f"(n={ev['n']}, containerd@1200rps)")
+    fl = measure_fleet_sim_throughput()
+    m["fleet"] = fl
+    print(f"fleet_sim_throughput: events={fl['sim_rps']:.0f} req/s "
+          f"({fl['n']} requests, 32 workers, containerd@12000rps "
+          f"aggregate)")
     if doc is not None:
         doc["metrics"].append(metric_row(
             "sim_throughput", ev["sim_rps"],
@@ -150,7 +187,41 @@ def run_sim_throughput(doc=None) -> dict:
             "sim_throughput_speedup", m["speedup"],
             f"events {ev['sim_rps']:.0f} req/s vs process "
             f"{pr['sim_rps']:.0f} req/s on the reference workload"))
+        doc["metrics"].append(metric_row(
+            "fleet_sim_throughput", fl["sim_rps"],
+            f"{fl['n']} simulated requests / {fl['wall_s']:.3f}s wall "
+            f"(32-worker containerd cluster @ 12000rps aggregate)"))
     return m
+
+
+def run_profile(args) -> int:
+    """Run one (scenario, backend) cell under cProfile and print the
+    top-25 cumulative entries — the starting point for perf work."""
+    import cProfile
+    import pstats
+    spec = args.profile
+    scenario_name, _, backend = spec.partition(":")
+    scenarios = {sc.name: sc for sc in build_scenarios().values()}
+    if scenario_name not in scenarios:
+        raise SystemExit(f"unknown scenario {scenario_name!r}; "
+                         f"see --list for names")
+    sc = scenarios[scenario_name]
+    backend = backend or sc.backends[0]
+    if backend not in sc.backends:
+        sc = dataclasses.replace(sc, backends=(backend,))
+    smoke = args.suite == "smoke"
+    scale = args.duration * (SMOKE_DURATION_SCALE if smoke else 1.0)
+    runner = ExperimentRunner(duration_scale=scale, smoke=smoke,
+                              verbose=False)
+    print(f"profiling {scenario_name}/{backend} "
+          f"(duration_scale={scale:.2f})")
+    prof = cProfile.Profile()
+    prof.enable()
+    runner.run_suite([dataclasses.replace(sc, backends=(backend,))],
+                     suite="profile")
+    prof.disable()
+    pstats.Stats(prof).sort_stats("cumulative").print_stats(25)
+    return 0
 
 
 def _parse_backends(spec: str):
@@ -316,6 +387,10 @@ def main(argv=None) -> int:
                     help="cap the adaptive knee search at N open-loop "
                          "probes per (backend, seed); applies to every "
                          "search-mode scenario (grid scenarios unaffected)")
+    ap.add_argument("--profile", metavar="SCENARIO[:BACKEND]", default=None,
+                    help="run one (scenario, backend) cell under cProfile "
+                         "and print the top-25 cumulative entries, then "
+                         "exit (default backend: the scenario's first)")
     ap.add_argument("--sim-throughput", action="store_true",
                     help="also measure simulated-requests-per-wall-second "
                          "of both drive() engines on the reference workload "
@@ -327,6 +402,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.list:
         return run_list(args)
+    if args.profile:
+        return run_profile(args)
     if args.suite == "legacy":
         if args.duration != 1.0 or args.workers or args.backends \
                 or args.search_budget is not None:

@@ -43,7 +43,7 @@ class FunctionSpec:
         return w * 1e-6
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class InvocationRecord:
     fn: str
     t_arrival: float

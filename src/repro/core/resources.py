@@ -8,6 +8,7 @@ run-to-completion scheduling sets a near-1 cap.
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from typing import Generator, Optional
 
@@ -16,6 +17,9 @@ from repro.core.simulator import Event, Simulator
 
 
 class CorePool:
+    __slots__ = ("sim", "n_cores", "runtime", "busy", "_waiters",
+                 "_queued_weight", "busy_time", "served", "_off_pend")
+
     def __init__(self, sim: Simulator, n_cores: int, runtime: RuntimeCosts):
         self.sim = sim
         self.n_cores = n_cores
@@ -27,6 +31,9 @@ class CorePool:
         # open loop plus legacy deploy/invoke processes) shares one queue
         self._waiters: deque = deque()
         self._queued_weight = 0     # extra backlog weight of fast waiters
+        # lazy releases: absolute times at which a held core frees
+        # without a scheduled event (see release_at) — a float min-heap
+        self._off_pend: list = []
         # accounting
         self.busy_time = 0.0
         self.served = 0
@@ -48,7 +55,11 @@ class CorePool:
     def consume(self, cpu_time: float) -> Generator:
         """Process-style: yield from pool.consume(t)."""
         ev: Optional[Event] = None
+        if self._off_pend:
+            self._drain(self.sim.now)
         if self.busy >= self.n_cores:
+            if self._off_pend:
+                self._materialize()
             ev = self.sim.event()
             self._waiters.append(ev)
             yield ev
@@ -77,18 +88,24 @@ class CorePool:
         event below takes over instead.  ``weight`` is this waiter's
         contribution to the thrash backlog (a merged off-path job stands
         for several legacy jobs)."""
-        now = self.sim.now
-        if self.busy < self.n_cores and not self._waiters:
+        if self._off_pend:
+            self._drain(self.sim.now)
+        busy = self.busy
+        nc = self.n_cores
+        if busy < nc and not self._waiters:
+            now = self.sim.now
             if avail_t <= now:
-                self.busy += 1
+                self.busy = busy + 1
                 cb(now, *args)
-            elif self.busy < self.n_cores - 1:
-                self.busy += 1
+            elif busy < nc - 1:
+                self.busy = busy + 1
                 cb(avail_t, *args)
             else:
                 self.sim._schedule(avail_t - now, self.acquire_fast,
                                    avail_t, cb, args, weight)
         else:
+            if self._off_pend:
+                self._materialize()
             self._waiters.append((avail_t, cb, args, weight))
             self._queued_weight += weight - 1
 
@@ -96,11 +113,47 @@ class CorePool:
         self.busy -= 1
         self.busy_time += eff
         self.served += 1
-        self._grant_next()
+        if self._waiters:
+            self._grant_next()
+
+    # -- lazy releases (kernel-bypass for off-path core holds) ------------
+    #
+    # A held core whose release time is already known can free *without*
+    # a scheduled event: ``release_at`` records the absolute time on a
+    # float min-heap, every pool reader drains expired entries first,
+    # and the moment anything has to queue (contention) the pending
+    # releases materialise into real heap events so waiting grants still
+    # fire at the exact release times.  Invariant: ``_off_pend`` is
+    # non-empty only while the waiter queue is empty.
+
+    def release_at(self, t: float) -> None:
+        """Lazily release one already-held busy core at absolute ``t``
+        (the caller incremented ``busy``; busy_time/served accounting
+        stays with the caller)."""
+        heapq.heappush(self._off_pend, t)
+
+    def _drain(self, now: float) -> None:
+        op = self._off_pend
+        while op and op[0] <= now:
+            heapq.heappop(op)
+            self.busy -= 1
+
+    def _materialize(self) -> None:
+        sched = self.sim._schedule
+        now = self.sim.now
+        for t in self._off_pend:
+            sched(t - now, self._lazy_release)
+        self._off_pend.clear()
+
+    def _lazy_release(self) -> None:
+        self.busy -= 1
+        if self._waiters:
+            self._grant_next()
 
     def _grant_next(self) -> None:
-        if self._waiters and self.busy < self.n_cores:
-            w = self._waiters.popleft()
+        waiters = self._waiters
+        if waiters and self.busy < self.n_cores:
+            w = waiters.popleft()
             if type(w) is tuple:
                 avail_t, cb, args, weight = w
                 self._queued_weight -= weight - 1

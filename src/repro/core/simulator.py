@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+from collections import deque
 from typing import Any, Callable, Generator, List, Optional
 
 import numpy as np
@@ -104,12 +105,12 @@ class Queue:
 
     def __init__(self, sim: "Simulator"):
         self.sim = sim
-        self.items: List[Any] = []
-        self._getters: List[Event] = []
+        self.items: deque = deque()
+        self._getters: deque = deque()
 
     def put(self, item: Any) -> None:
         if self._getters:
-            ev = self._getters.pop(0)
+            ev = self._getters.popleft()
             ev.succeed(item)
         else:
             self.items.append(item)
@@ -117,7 +118,7 @@ class Queue:
     def get(self) -> Event:
         ev = Event(self.sim)
         if self.items:
-            ev.succeed(self.items.pop(0))
+            ev.succeed(self.items.popleft())
         else:
             self._getters.append(ev)
         return ev
@@ -170,16 +171,20 @@ class EventLoop:
         n_arr = len(arr)
         inf = float("inf")
         i = 0
+        # t_ar is loop-invariant between admits, so it is cached and
+        # refreshed only when i advances; t_ev must be re-read from the
+        # heap every iteration (callbacks and admit push new events)
+        t_ar = arr[0] if n_arr else inf
         sim.stopped = False
         while not sim.stopped:
             t_ev = heap[0][0] if heap else inf
-            t_ar = arr[i] if i < n_arr else inf
             if t_ar <= t_ev:
                 if t_ar > until:
                     break
                 sim.now = t_ar
                 admit(i, t_ar)
                 i += 1
+                t_ar = arr[i] if i < n_arr else inf
             else:
                 if t_ev > until:
                     break

@@ -506,6 +506,122 @@ def _drive_process(runtime: FaasdRuntime, load: LoadSpec,
                      len(rel_times) / max(duration_s, 1e-9))
 
 
+# The event engine's kernel-bypass analog: when a routed pool is
+# uncontended at admit time (free cores beyond a one-core reservation
+# margin, no waiters), the request's whole 3-station + 2-gap timeline is
+# *fused* into one precomputed completion event (plus one off-path core
+# release), skipping the per-station machine entirely — the same idea as
+# acquire_fast's reservation-across-the-gap, extended to the request.
+# Contended admits fall back to the per-station machine, whose thrash
+# dynamics are path-dependent.  Tests flip this off to pin fused ==
+# unfused accounting on contention-free schedules.
+FUSED_FAST_PATH = True
+
+
+def _sample_request_matrices(runtime_of, fn_names, picks, rng, n):
+    """Vectorized per-request cost matrices for one run, sampled once per
+    function (the batch is routed afterwards).  Returns
+    ``(H, G, OFF, EX, stack_cpu, n_hic)`` where ``stack_cpu``/``n_hic``
+    are per-function lists (netstack accounting is the caller's business:
+    the single-runtime driver books one stack, the fleet driver books the
+    routed worker's)."""
+    H = np.empty((n, 3))            # station CPU holds
+    G = np.empty((n, 2))            # inter-station latency gaps
+    OFF = np.empty(n)               # merged off-path CPU job
+    EX = np.empty(n)                # exec-span approximation for records
+    stack_cpu = [0.0] * len(fn_names)
+    n_hic = [0] * len(fn_names)
+    for f, nm in enumerate(fn_names):
+        mask = picks == f
+        m = int(mask.sum())
+        if m == 0:
+            continue
+        plan = runtime_of(nm).invocation_plan(nm)
+        h, g, off, ex, hic = plan.sample(rng, m)
+        H[mask] = h
+        G[mask] = g
+        OFF[mask] = off
+        EX[mask] = ex
+        stack_cpu[f] = plan.stack_cpu_s
+        n_hic[f] = hic
+    return H, G, OFF, EX, stack_cpu, n_hic
+
+
+def _fused_arrays(AT, H, G, OFF, EX):
+    """Precomputed absolute timelines for the fused fast path, as flat
+    Python lists (structure-of-arrays: one ``.tolist()`` per column beats
+    per-request tuple/list allocation by a wide margin).
+
+    Returns ``(END, OFFEND, CPU, EXS, EXE)``: uncontended completion
+    time, off-path job end, total CPU charged per request, and the
+    recorded exec span's start/end — all identical to what the
+    per-station machine produces on an uncontended walk (thrash 1.0,
+    every gap reservation granted)."""
+    h0 = H[:, 0]
+    span = H.sum(axis=1) + G.sum(axis=1)
+    exs = AT + h0 + G[:, 0]
+    return ((AT + span).tolist(), (AT + h0 + OFF).tolist(),
+            (H.sum(axis=1) + OFF).tolist(), exs.tolist(),
+            (exs + EX).tolist())
+
+
+def _append_records(records, fn_names, picksL, ATL, ex_start, EX, done_t):
+    """Materialise :class:`InvocationRecord`\\ s for every completed
+    request, in completion order, after the event loop has drained —
+    the hot loop only writes ``done_t``/``ex_start`` floats."""
+    dt = np.asarray(done_t)
+    idx = np.flatnonzero(dt > 0.0)
+    if not idx.size:
+        return
+    idx = idx[np.argsort(dt[idx], kind="stable")]
+    ex_end = (np.asarray(ex_start) + EX).tolist()
+    rec = InvocationRecord
+    append = records.append
+    for i in idx.tolist():
+        append(rec(fn_names[picksL[i]], ATL[i], ex_start[i], ex_end[i],
+                   done_t[i]))
+
+
+def _events_result(fn_names, picks, AT, done_t, t0, duration_s, warmup_s,
+                   drain_s, admitted, rejected, offered_rps):
+    """Vectorized result row for the event engines (same schema as
+    :func:`_assemble`, computed from the driver's flat arrays instead of
+    per-record Python loops)."""
+    dt = np.asarray(done_t)
+    m = (dt > 0.0) & (AT >= t0 + warmup_s)      # completed, past warmup
+    lat = (dt[m] - AT[m]) * 1e3
+    dmask = m & (dt <= t0 + duration_s + drain_s)
+    n_done = int(np.count_nonzero(dmask))
+    summary = LatencySummary.of(lat)
+    per_fn: Dict[str, LatencySummary] = {}
+    pm = picks[m]
+    for f, name in enumerate(fn_names):
+        fn_lat = lat[pm == f]
+        if fn_lat.size:
+            per_fn[name] = LatencySummary.of(fn_lat)
+    t_start = t0 + warmup_s
+    if n_done:
+        span = max(1e-9, max(float(dt[dmask].max()), t0 + duration_s)
+                   - t_start)
+        completion_rps = n_done / span
+    else:
+        completion_rps = 0.0
+    return {
+        "offered_rps": offered_rps,
+        "achieved_rps": n_done / max(1e-9, duration_s - warmup_s),
+        "completion_rps": completion_rps,
+        "completed_frac": n_done / max(1, admitted),
+        "median_ms": summary.median_ms,
+        "p99_ms": summary.p99_ms,
+        "mean_ms": summary.mean_ms,
+        "p999_ms": summary.p999_ms,
+        "n": summary.n,
+        "rejected": rejected,
+        "per_fn": per_fn,
+        "latencies_ms": lat.tolist(),
+    }
+
+
 def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
                   obs: SimObserver) -> Dict[str, object]:
     """Fast engine: hop-compressed invocations on the flat event heap.
@@ -516,7 +632,13 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
     event loop then runs pure float arithmetic over plain callbacks.
     Generator processes already on the simulator (autoscaler operations,
     the Junction scheduler poll loop, provisioning storms) interleave
-    through the shared heap and contend for the same core pool."""
+    through the shared heap and contend for the same core pool.
+
+    Requests admitted into an uncontended pool take the *fused* path:
+    the whole station timeline collapses to one precomputed completion
+    event (see ``FUSED_FAST_PATH`` above) — ~1-2 heap events per request
+    instead of ~4 — while contended admits walk the per-station machine
+    below, unchanged."""
     sim = runtime.sim
     fn_names = load.functions
     duration_s = load.duration_s
@@ -532,50 +654,49 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
     else:
         picks = np.zeros(n, dtype=np.intp)
 
-    H = np.empty((n, 3))            # station CPU holds
-    G = np.empty((n, 2))            # inter-station latency gaps
-    OFF = np.empty(n)               # merged off-path CPU job
-    EX = np.empty(n)                # exec-span approximation for records
+    AT = t0 + rel
+    H, G, OFF, EX, stack_cpu, n_hic = _sample_request_matrices(
+        lambda _nm: runtime, fn_names, picks, sim.rng, n)
     stack = runtime.stack
-    for f, nm in enumerate(fn_names):
-        mask = picks == f
-        m = int(mask.sum())
-        if m == 0:
-            continue
-        plan = runtime.invocation_plan(nm)
-        h, g, off, ex, n_hic = plan.sample(sim.rng, m)
-        H[mask] = h
-        G[mask] = g
-        OFF[mask] = off
-        EX[mask] = ex
+    for f in range(len(fn_names)):
+        m = int((picks == f).sum()) if len(fn_names) > 1 else n
         # netstack accounting the per-request path would have done
         stack.messages += 4 * m
-        stack.cpu_spent += m * plan.stack_cpu_s
-        stack.hiccups += n_hic
+        stack.cpu_spent += m * stack_cpu[f]
+        stack.hiccups += n_hic[f]
 
-    # plain lists: ~3x faster element access than ndarray scalars here
-    HL = H.tolist()
-    GL = G.tolist()
+    # flat structure-of-arrays buffers: one list per column (station
+    # holds indexed 3*i+k, gaps 2*i+k) — Python float access without the
+    # per-request inner lists the old H.tolist() materialised
+    H3 = H.ravel().tolist()
+    G2 = G.ravel().tolist()
     OFFL = OFF.tolist()
-    EXL = EX.tolist()
-    ATL = (t0 + rel).tolist()
+    ATL = AT.tolist()
     picksL = picks.tolist()
-    ex_start = [0.0] * n
+    ENDL, OFFENDL, CPUL, EXSL, EXEL = _fused_arrays(AT, H, G, OFF, EX)
+    # exec-span start: fused requests keep the precomputed uncontended
+    # value; the station machine overwrites it with the actual exec grant
+    ex_start = list(EXSL)
+    done_t = [0.0] * n              # completion time; 0.0 = not completed
 
     # The station machine below inlines CorePool.acquire_fast /
     # release_fast field-for-field (busy/_waiters/_queued_weight stay
     # consistent, and queued grants drain through pool._grant_next either
-    # way) — at ~4 heap events per request, each spared function call is
-    # a measurable slice of the wall time.  busy_time/served are pure
-    # end-of-run accounting (nothing reads them mid-run), so they
-    # accumulate in locals and flush once after the loop.  Two
-    # consequences of the pool's invariants are exploited: an immediate
-    # grant requires an empty waiter queue, where backlog == 0 and the
-    # thrash multiplier is exactly 1.0; only grants popped off the waiter
-    # queue (by _granted/_off_granted below) see a non-trivial backlog.
+    # way) — each spared function call is a measurable slice of the wall
+    # time.  busy_time/served/cache_hits/rejected are pure end-of-run
+    # accounting (nothing reads them mid-run), so they accumulate in
+    # locals and flush once after the loop.  Two consequences of the
+    # pool's invariants are exploited: an immediate grant requires an
+    # empty waiter queue, where backlog == 0 and the thrash multiplier
+    # is exactly 1.0; only grants popped off the waiter queue (by
+    # _granted/_off_granted below) see a non-trivial backlog.
     pool = runtime.cores
     waiters = pool._waiters
     grant_next = pool._grant_next
+    off_pend = pool._off_pend
+    materialize = pool._materialize
+    hpush = heapq.heappush
+    hpop = heapq.heappop
     t_coeff = runtime.runtime.thrash_coeff
     t_cap = runtime.runtime.thrash_cap
     heap = sim._heap
@@ -585,33 +706,78 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
     off_weight = InvocationPlan.OFFPATH_BACKLOG_WEIGHT
     st_weight = InvocationPlan.STATION_BACKLOG_WEIGHT
     observed = obs is not _NULL_OBSERVER
+    fuse = FUSED_FAST_PATH
     t_warm = t0 + warmup_s
     outstanding = 0
-    admitted = 0
     busy_time = 0.0
     served = 0
-    rejected0 = runtime.rejected
-    start_idx = len(records)
+    rejected = 0
+    rejected_warm = 0
+    fused = bytearray(n)            # fused admits; accounted post-loop
 
     def _admit(i, t):
-        nonlocal outstanding, admitted
+        # per-request totals that nothing reads mid-run (cache_hits,
+        # post-warmup admits, fused busy_time/served) are derived after
+        # the loop from the arrival count and the fused bitmap — the
+        # admit path only touches admission state
+        nonlocal outstanding, rejected, rejected_warm
         if outstanding >= max_out:
-            runtime.rejected += 1
+            rejected += 1
+            if t >= t_warm:
+                rejected_warm += 1
             return
         outstanding += 1
-        if t >= t_warm:
-            admitted += 1
-        runtime.cache_hits += 1     # warm cached resolve per request
         if observed:
             obs.on_arrival(fn_names[picksL[i]])
+        while off_pend and off_pend[0] <= t:   # expired lazy releases
+            hpop(off_pend)
+            pool.busy -= 1
         b = pool.busy
-        if b < pool.n_cores and not waiters:
-            pool.busy = b + 1
-            eff = HL[i][0]          # empty queue -> thrash == 1.0
-            push(heap, (t + eff, next(counter), _complete, (i, 0, eff, t)))
-        else:
-            waiters.append((t, _granted, (i, 0), st_weight))
-            pool._queued_weight += st_weight - 1
+        if not waiters:
+            if fuse:
+                # fused fast path: the whole timeline is precomputed
+                # (thrash 1.0 throughout); holds the on-path core to
+                # completion and the off-path core to the off job's end
+                # (released lazily, no heap event), always leaving one
+                # spare core unreserved
+                off = OFFL[i]
+                if off > 0.0:
+                    if b + 2 < pool.n_cores:
+                        pool.busy = b + 2
+                        fused[i] = 1
+                        push(heap, (ENDL[i], next(counter),
+                                    _fused_done, (i,)))
+                        hpush(off_pend, OFFENDL[i])
+                        return
+                elif b + 1 < pool.n_cores:
+                    pool.busy = b + 1
+                    fused[i] = 1
+                    push(heap, (ENDL[i], next(counter), _fused_done, (i,)))
+                    return
+            if b < pool.n_cores:
+                pool.busy = b + 1
+                eff = H3[3 * i]     # empty queue -> thrash == 1.0
+                push(heap, (t + eff, next(counter), _complete,
+                            (i, 0, eff, t)))
+                return
+        if off_pend:
+            materialize()
+        waiters.append((t, _granted, (i, 0), st_weight))
+        pool._queued_weight += st_weight - 1
+
+    def _fused_done(i):
+        # one event for the whole request: release the on-path core and
+        # finish (records and busy_time/served accounting are
+        # materialised after the loop, off the hot path — done_t is the
+        # only per-completion state)
+        nonlocal outstanding
+        pool.busy -= 1
+        if waiters:
+            grant_next()
+        outstanding -= 1
+        done_t[i] = ENDL[i]
+        if observed:
+            obs.on_done(fn_names[picksL[i]])
 
     def _complete(i, k, eff, start):
         # release the station's core (event time is always start + eff)
@@ -625,14 +791,13 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
         if k == 2:
             nonlocal outstanding
             outstanding -= 1
-            rec = InvocationRecord(fn=fn_names[picksL[i]], t_arrival=ATL[i])
-            rec.t_start_exec = ex_start[i]
-            rec.t_end_exec = ex_start[i] + EXL[i]
-            rec.t_done = now
-            records.append(rec)
+            done_t[i] = now
             if observed:
-                obs.on_done(rec.fn)
+                obs.on_done(fn_names[picksL[i]])
             return
+        while off_pend and off_pend[0] <= now:  # expired lazy releases
+            hpop(off_pend)
+            pool.busy -= 1
         if k == 0:
             off = OFFL[i]
             if off > 0.0:           # merged off-path CPU job
@@ -641,6 +806,8 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
                     pool.busy = b + 1
                     push(heap, (now + off, next(counter), _off_done, (off,)))
                 else:
+                    if off_pend:
+                        materialize()
                     waiters.append((now, _off_granted, (off,), off_weight))
                     pool._queued_weight += off_weight - 1
         else:
@@ -648,7 +815,7 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
             # recorded exec span
             ex_start[i] = start
         # acquire the next station's core, available after the net gap
-        avail = now + GL[i][k]
+        avail = now + G2[2 * i + k]
         k += 1
         b = pool.busy
         nc = pool.n_cores
@@ -658,23 +825,30 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
                 # spare core; near saturation fall through to a wakeup
                 # event at avail instead (no capacity is held idle)
                 pool.busy = b + 1
-                eff = HL[i][k]
+                eff = H3[3 * i + k]
                 push(heap, (avail + eff, next(counter), _complete,
                             (i, k, eff, avail)))
             else:
                 push(heap, (avail, next(counter), _retry, (avail, i, k)))
         else:
+            if off_pend:
+                materialize()
             waiters.append((avail, _granted, (i, k), st_weight))
             pool._queued_weight += st_weight - 1
 
     def _retry(avail, i, k):
+        while off_pend and off_pend[0] <= avail:  # expired lazy releases
+            hpop(off_pend)
+            pool.busy -= 1
         b = pool.busy
         if b < pool.n_cores and not waiters:
             pool.busy = b + 1
-            eff = HL[i][k]          # empty queue -> thrash == 1.0
+            eff = H3[3 * i + k]     # empty queue -> thrash == 1.0
             push(heap, (avail + eff, next(counter), _complete,
                         (i, k, eff, avail)))
         else:
+            if off_pend:
+                materialize()
             waiters.append((avail, _granted, (i, k), st_weight))
             pool._queued_weight += st_weight - 1
 
@@ -683,7 +857,7 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
         # sets this hold's thrash multiplier (as in CorePool.consume)
         th = 1.0 + t_coeff * (len(waiters) + pool._queued_weight) \
             / pool.n_cores
-        eff = HL[i][k] * (t_cap if th > t_cap else th)
+        eff = H3[3 * i + k] * (t_cap if th > t_cap else th)
         push(heap, (start + eff, next(counter), _complete, (i, k, eff, start)))
 
     def _off_granted(start, off):
@@ -700,12 +874,25 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
         if waiters:
             grant_next()
 
-    EventLoop(sim).run(t0 + duration_s + drain_s, ATL, _admit)
-    pool.busy_time += busy_time
-    pool.served += served
-    return _assemble(runtime, start_idx, fn_names, t0, duration_s, warmup_s,
-                     drain_s, admitted, rejected0,
-                     n / max(duration_s, 1e-9))
+    delivered = EventLoop(sim).run(t0 + duration_s + drain_s, ATL, _admit)
+    # deferred per-request accounting: every delivered non-rejected
+    # arrival is one warm cached resolve; a fused request whose single
+    # completion event fired (done_t set — straddlers past the drain
+    # horizon never fire, as their unfused stations would not have)
+    # contributes its whole precomputed CPU/served total
+    fmask = (np.frombuffer(fused, dtype=np.uint8).astype(bool)
+             & (np.asarray(done_t) > 0.0))
+    pool.busy_time += busy_time + float((H.sum(axis=1) + OFF)[fmask].sum())
+    pool.served += served + int(3 * fmask.sum()
+                                + np.count_nonzero(fmask & (OFF > 0.0)))
+    runtime.cache_hits += delivered - rejected
+    runtime.rejected += rejected
+    admitted = (int(np.count_nonzero(AT[:delivered] >= t_warm))
+                - rejected_warm)
+    _append_records(records, fn_names, picksL, ATL, ex_start, EX, done_t)
+    return _events_result(fn_names, picks, AT, done_t, t0, duration_s,
+                          warmup_s, drain_s, admitted, rejected,
+                          n / max(duration_s, 1e-9))
 
 
 def run_mixed_open_loop(runtime: FaasdRuntime, fn_names: Sequence[str],

@@ -22,7 +22,7 @@ if TYPE_CHECKING:  # pragma: no cover
 class Gateway:
 
     __slots__ = ("cluster", "policy", "spill_load", "placements",
-                 "expansions", "_expanding")
+                 "expansions", "_expanding", "_ready_cache", "_pick_min")
 
     def __init__(self, cluster: "Cluster", policy: "PlacementPolicy",
                  spill_load: Optional[float] = 8.0):
@@ -32,6 +32,10 @@ class Gateway:
         self.placements = [0] * len(cluster.workers)
         self.expansions: List[Dict] = []
         self._expanding: Set[str] = set()
+        # per-function ready Worker lists, invalidated by length when a
+        # provision marks a new worker ready (workers are never removed)
+        self._ready_cache: Dict[str, List["Worker"]] = {}
+        self._pick_min = getattr(policy, "pick_min", None)
 
     def route(self, fn: str) -> Optional["Worker"]:
         """Pick the worker for one invocation of ``fn``; ``None`` means
@@ -40,14 +44,24 @@ class Gateway:
         ids = cl.ready.get(fn)
         if not ids:
             return None
-        ready = [cl.workers[i] for i in ids]
-        w = self.policy.pick(fn, ready)
+        ready = self._ready_cache.get(fn)
+        if ready is None or len(ready) != len(ids):
+            ready = [cl.workers[i] for i in ids]
+            self._ready_cache[fn] = ready
+        pick_min = self._pick_min
+        if pick_min is not None:
+            w, lo = pick_min(fn, ready)
+        else:
+            w = self.policy.pick(fn, ready)
+            lo = None
         self.placements[w.wid] += 1
         if (self.spill_load is not None
                 and len(ids) < len(cl.workers)
-                and fn not in self._expanding
-                and min(x.load for x in ready) >= self.spill_load):
-            self._expand(fn, ids)
+                and fn not in self._expanding):
+            if lo is None:
+                lo = min(x.load for x in ready)
+            if lo >= self.spill_load:
+                self._expand(fn, ids)
         return w
 
     def _expand(self, fn: str, ready_ids) -> None:

@@ -99,12 +99,43 @@ class LeastLoadedPlacement(PlacementPolicy):
         self._cursor = 0
 
     def pick(self, fn: str, ready: Sequence["Worker"]) -> "Worker":
-        lo = min(w.load for w in ready)
-        ties = [w for w in ready if w.load == lo]
+        return self.pick_min(fn, ready)[0]
+
+    def pick_min(self, fn: str, ready: Sequence["Worker"]):
+        """``(pick(fn, ready), min load)`` in one pass over the ready
+        set — the gateway reuses the scanned minimum for its spill
+        check instead of re-walking the fleet.  ``ready`` arrives in
+        wid order, so tracking the first minimum-load worker and the
+        first at-or-after the cursor reproduces the tie-rotation of the
+        two-pass form exactly."""
         c = self._cursor
-        w = next((x for x in ties if x.wid >= c), ties[0])
+        lo = float("inf")
+        first = ge = None
+        try:
+            # inlined Worker.load: this scan runs once per routed
+            # request and dominates the fleet driver's wall time
+            for w in ready:
+                l = w.outstanding / (w.runtime.cores.n_cores or 1)
+                if l < lo:
+                    lo = l
+                    first = w
+                    ge = w if w.wid >= c else None
+                elif l == lo and ge is None and w.wid >= c:
+                    ge = w
+        except AttributeError:      # duck-typed stand-ins expose .load
+            lo = float("inf")
+            first = ge = None
+            for w in ready:
+                l = w.load
+                if l < lo:
+                    lo = l
+                    first = w
+                    ge = w if w.wid >= c else None
+                elif l == lo and ge is None and w.wid >= c:
+                    ge = w
+        w = ge if ge is not None else first
         self._cursor = w.wid + 1
-        return w
+        return w, lo
 
 
 @register_placement
