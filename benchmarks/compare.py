@@ -33,7 +33,8 @@ from repro.experiments import validate_artifact
 # explicitly: it is the raw-speed gate of the event-heap driver and must
 # never silently flip direction if the fragment list is pruned.
 _HIGHER_IS_BETTER = ("ratio", "speedup", "reduction", "sustainable",
-                     "knee", "throughput", "sim_throughput", "_rps")
+                     "knee", "throughput", "sim_throughput", "_rps",
+                     "improvement", "efficiency")
 
 THRESHOLD_DEFAULT = 0.10
 

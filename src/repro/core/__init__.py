@@ -24,8 +24,8 @@ from repro.core.netstack import NetStack
 from repro.core.resources import CorePool
 from repro.core.scheduler import JunctionScheduler, PollingModel
 from repro.core.simulator import Event, EventLoop, Process, Queue, Simulator
-from repro.core.workload import (ArrivalProcess, BurstyArrivals,
-                                 DiurnalArrivals, KneeSearch,
+from repro.core.workload import (ArrivalProcess, BurstyArrivals, ChainEdge,
+                                 DiurnalArrivals, FusionPlan, KneeSearch,
                                  KneeSearchResult, LatencySummary, LoadSpec,
                                  NullObserver, PoissonArrivals, SimObserver,
                                  TraceReplay, drive, heavy_tailed_work,
@@ -47,7 +47,8 @@ __all__ = [
     "NetStack", "CorePool",
     "JunctionScheduler", "PollingModel", "Event", "EventLoop", "Process",
     "Queue",
-    "Simulator", "LatencySummary", "LoadSpec", "SimObserver", "NullObserver",
+    "Simulator", "LatencySummary", "LoadSpec", "ChainEdge", "FusionPlan",
+    "SimObserver", "NullObserver",
     "drive", "run_open_loop", "run_sequential",
     "sustainable_throughput",
     "ArrivalProcess", "PoissonArrivals", "BurstyArrivals", "DiurnalArrivals",

@@ -171,6 +171,22 @@ class InvocationPlan:
         exec_s = work + overhead + ehic
         return holds, gaps, offpath, exec_s, n_hic
 
+    def sample_exec(self, rng: np.random.Generator, m: int):
+        """Exec-only variates for ``m`` *fused* intra-sandbox handoffs:
+        a fused chain callee skips the gateway and netstack stations
+        entirely, so only its function body is charged — ``(cpu, hic)``
+        where ``cpu`` is CPU held on the exec station (work + syscall
+        overhead) and ``hic`` is tail-hiccup latency, both (m,) in
+        seconds."""
+        work = self._work_batch(rng, m) * self.work_mult
+        overhead = rng.lognormal(math.log(self.overhead_us),
+                                 self.app_sigma, m) * 1e-6
+        hic = np.zeros(m)
+        hit = rng.random(m) < self.exec_hiccup_p
+        hic[hit] = rng.uniform(self.exec_hiccup_lo_s, self.exec_hiccup_hi_s,
+                               int(hit.sum()))
+        return work + overhead, hic
+
 
 class FaasdRuntime:
     """One worker node running the full faasd stack."""
@@ -247,15 +263,19 @@ class FaasdRuntime:
             self._cache[fn_name] = rec
         return rec
 
-    def invocation_plan(self, fn_name: str) -> InvocationPlan:
+    def invocation_plan(self, fn_name: str,
+                        payload_scale: float = 1.0) -> InvocationPlan:
         """Compile the warm invocation chain for ``fn_name`` into the
         hop-compressed template the event-heap driver executes (see
         :class:`InvocationPlan`).  Message sizes and cost tables are
-        resolved once here instead of per request."""
+        resolved once here instead of per request.  ``payload_scale``
+        scales the request payload (a chain hop's input is the upstream
+        edge's transformed payload); the response rides unscaled."""
         spec = self.functions[fn_name]
         r = self.runtime
         c = self.stack.costs
-        sizes = (spec.payload_bytes + 220, spec.payload_bytes + 180,
+        p = spec.payload_bytes * payload_scale
+        sizes = (p + 220, p + 180,
                  spec.response_bytes + 120, spec.response_bytes + 120)
         tx = tuple((c.tx_cpu_us + c.per_kb_us * s / 1024.0) * 1e-6
                    for s in sizes)
@@ -284,25 +304,34 @@ class FaasdRuntime:
         )
 
     # -- the invocation path (measured from the gateway, as in Fig 5) ------
-    def invoke(self, fn_name: str) -> Generator:
-        """Process: one warm invocation; returns the InvocationRecord."""
+    def invoke(self, fn_name: str, payload_scale: float = 1.0,
+               fused: Tuple[str, ...] = ()) -> Generator:
+        """Process: one warm invocation; returns the InvocationRecord.
+
+        ``payload_scale`` scales the request payload (chain hops carry
+        the upstream edge's transformed payload); ``fused`` names chain
+        callees co-located in this sandbox — their function bodies run
+        inline inside the exec span, skipping gateway and netstack."""
         spec = self.functions[fn_name]
         r = self.runtime
         rec = InvocationRecord(fn=fn_name, t_arrival=self.sim.now)
+        p = spec.payload_bytes * payload_scale
         # 1. gateway: auth + route + proxy
         yield from self._app(r.gateway_us)
         # 2. gw -> provider (gRPC leg 1)
-        yield from self.stack.deliver(spec.payload_bytes + 220)
+        yield from self.stack.deliver(p + 220)
         # 3. provider: resolve endpoint (+ proxy)
         yield from self._resolve(fn_name)
         yield from self._app(r.provider_us)
         # 4. provider -> function instance (gRPC leg 2)
-        yield from self.stack.deliver(spec.payload_bytes + 180)
+        yield from self.stack.deliver(p + 180)
         # 5. in-instance watchdog dispatch
         yield from self._app(r.watchdog_us)
-        # 6. function execution
+        # 6. function execution (+ fused chain callees, in-sandbox)
         rec.t_start_exec = self.sim.now
         yield from self._exec_function(spec)
+        for nm in fused:
+            yield from self._exec_function(self.functions[nm])
         rec.t_end_exec = self.sim.now
         # 7. response: fn -> provider -> gateway (reverse proxying)
         yield from self.stack.deliver(spec.response_bytes + 120)

@@ -12,8 +12,8 @@ import dataclasses
 import heapq
 import math
 import warnings
-from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
-                    Tuple, Union)
+from typing import (Callable, Dict, List, Mapping, Optional, Protocol,
+                    Sequence, Tuple, Union)
 
 import numpy as np
 
@@ -334,6 +334,86 @@ def _hooks_observer(on_arrival, on_done) -> Optional[SimObserver]:
     return _HookObserver(on_arrival, on_done)
 
 
+def _check_chain_acyclic(chains: Mapping[str, Tuple["ChainEdge", ...]]):
+    """Reject cyclic chain graphs at LoadSpec construction: a cycle
+    would expand an arrival into an unbounded hop tree."""
+    WHITE, GREY, BLACK = 0, 1, 2
+    color: Dict[str, int] = {}
+
+    def visit(fn: str, path: Tuple[str, ...]):
+        color[fn] = GREY
+        for e in chains.get(fn, ()):
+            c = color.get(e.target, WHITE)
+            if c == GREY:
+                raise ValueError(
+                    f"chain cycle: {' -> '.join(path + (e.target,))}")
+            if c == WHITE:
+                visit(e.target, path + (e.target,))
+        color[fn] = BLACK
+
+    for fn in chains:
+        if color.get(fn, WHITE) == WHITE:
+            visit(fn, (fn,))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainEdge:
+    """One downstream edge of a function chain/DAG: on completion of the
+    caller, ``target`` is invoked with probability ``prob``, its request
+    payload scaled by ``payload_scale`` (the caller's transform of the
+    data it forwards).  Scales compose multiplicatively along a chain."""
+
+    target: str
+    prob: float = 1.0
+    payload_scale: float = 1.0
+
+    def __post_init__(self):
+        if not self.target:
+            raise ValueError("ChainEdge needs a target function name")
+        if not 0.0 < self.prob <= 1.0:
+            raise ValueError(f"ChainEdge prob must be in (0, 1], "
+                             f"got {self.prob}")
+        if self.payload_scale <= 0.0:
+            raise ValueError(f"ChainEdge payload_scale must be positive, "
+                             f"got {self.payload_scale}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionPlan:
+    """Platform-side fusion pass (Provuse-style): ``edges`` names the
+    (caller, callee) chain edges to co-locate in the caller's sandbox —
+    a fused hop skips the gateway and netstack entirely and runs as an
+    appended exec inside the caller's request.  ``backends`` restricts
+    the pass to the named backends (``None`` fuses everywhere), so one
+    scenario can fuse on containerd-class backends while leaving a
+    kernel-bypass backend unfused for comparison."""
+
+    edges: Tuple[Tuple[str, str], ...] = ()
+    backends: Optional[Tuple[str, ...]] = None
+
+    def __post_init__(self):
+        norm = []
+        for e in self.edges:
+            caller, callee = e
+            if not caller or not callee:
+                raise ValueError(f"FusionPlan edge needs non-empty caller "
+                                 f"and callee, got {e!r}")
+            pair = (str(caller), str(callee))
+            if pair not in norm:
+                norm.append(pair)
+        object.__setattr__(self, "edges", tuple(norm))
+        if self.backends is not None:
+            object.__setattr__(self, "backends",
+                               tuple(str(b) for b in self.backends))
+        object.__setattr__(self, "_edge_set", frozenset(self.edges))
+
+    def fuses(self, caller: str, callee: str) -> bool:
+        return (caller, callee) in self._edge_set
+
+    def applies_to(self, backend: str) -> bool:
+        return self.backends is None or backend in self.backends
+
+
 @dataclasses.dataclass(frozen=True)
 class LoadSpec:
     """What to offer a runtime: an arrival process over a weighted
@@ -342,7 +422,13 @@ class LoadSpec:
     ``warmup_s`` (absolute) overrides ``warmup_frac`` when set — latency
     statistics and the completed-fraction denominator only count
     requests arriving after the warmup boundary, though every admitted
-    request still runs (and reaches the observer)."""
+    request still runs (and reaches the observer).
+
+    ``chains`` maps a function name to its downstream
+    :class:`ChainEdge`\\ s: each admitted arrival of that function
+    expands into its chain of hops, every non-fused hop re-entering
+    admission as a request of its own.  ``fusion`` optionally co-locates
+    selected edges (see :class:`FusionPlan`); it requires ``chains``."""
 
     arrivals: ArrivalProcess
     functions: Tuple[str, ...]
@@ -352,6 +438,8 @@ class LoadSpec:
     warmup_s: Optional[float] = None
     max_outstanding: int = 20000
     drain_s: float = 2.0
+    chains: Optional[Mapping[str, Tuple[ChainEdge, ...]]] = None
+    fusion: Optional[FusionPlan] = None
 
     def __post_init__(self):
         object.__setattr__(self, "functions", tuple(self.functions))
@@ -362,7 +450,38 @@ class LoadSpec:
             if len(w) != len(self.functions):
                 raise ValueError(
                     f"{len(w)} weights for {len(self.functions)} functions")
+            if any(x < 0.0 for x in w):
+                raise ValueError(f"LoadSpec weights must be non-negative, "
+                                 f"got {w}")
+            if sum(w) <= 0.0:
+                raise ValueError("LoadSpec weights must have a positive sum "
+                                 "(all-zero weights cannot be normalized)")
             object.__setattr__(self, "weights", w)
+        if self.duration_s <= 0.0:
+            raise ValueError(f"duration_s must be positive, "
+                             f"got {self.duration_s}")
+        if not 0.0 <= self.warmup_frac < 1.0:
+            raise ValueError(
+                f"warmup_frac must be in [0, 1) — a warmup covering the "
+                f"whole run leaves an empty observation window; "
+                f"got {self.warmup_frac}")
+        if self.warmup_s is not None and not \
+                0.0 <= self.warmup_s < self.duration_s:
+            raise ValueError(
+                f"warmup_s must be in [0, duration_s) — warmup "
+                f"{self.warmup_s}s leaves no observation window in a "
+                f"{self.duration_s}s run")
+        if self.chains is not None:
+            chains = {str(k): tuple(v) for k, v in dict(self.chains).items()}
+            for fn, edges in chains.items():
+                for e in edges:
+                    if not isinstance(e, ChainEdge):
+                        raise ValueError(f"chains[{fn!r}] must hold "
+                                         f"ChainEdge instances, got {e!r}")
+            _check_chain_acyclic(chains)
+            object.__setattr__(self, "chains", chains)
+        if self.fusion is not None and self.chains is None:
+            raise ValueError("LoadSpec fusion requires chains")
 
     @classmethod
     def single(cls, fn_name: str, rate_rps: float, **kw) -> "LoadSpec":
@@ -383,6 +502,20 @@ class LoadSpec:
         return w / w.sum()
 
 
+def _load_function_names(load: LoadSpec) -> Tuple[str, ...]:
+    """Every function a load can invoke: the mix itself plus any chain
+    targets reachable through its edges."""
+    names = list(load.functions)
+    seen = set(names)
+    if load.chains:
+        for fn, edges in load.chains.items():
+            for nm in (fn,) + tuple(e.target for e in edges):
+                if nm not in seen:
+                    seen.add(nm)
+                    names.append(nm)
+    return tuple(names)
+
+
 def _fast_capable(runtime: FaasdRuntime, load: LoadSpec) -> bool:
     """The event engine compiles the warm cached-resolve chain; a run
     that would take the provider's backend-query path (cache disabled or
@@ -390,7 +523,148 @@ def _fast_capable(runtime: FaasdRuntime, load: LoadSpec) -> bool:
     if not getattr(runtime, "provider_cache", False):
         return False
     cache = getattr(runtime, "_cache", None)
-    return cache is not None and all(fn in cache for fn in load.functions)
+    return cache is not None and all(fn in cache
+                                     for fn in _load_function_names(load))
+
+
+class _ChainTable:
+    """Expanded request table for one chained run: rows 0..n_roots-1 are
+    the admitted arrival stream's roots (in arrival order); hop rows are
+    appended in DFS order.  ``children[i]`` lists the rows spawned when
+    row ``i`` completes; ``members[i]`` lists the ``(fn_index,
+    payload_scale)`` of chain callees fused *into* row ``i``'s sandbox
+    (they add exec cost to the row instead of becoming rows)."""
+
+    __slots__ = ("fn_names", "fidx", "scale", "depth", "root", "children",
+                 "members", "n_roots")
+
+    def __init__(self, fn_names, fidx, scale, depth, root, children,
+                 members, n_roots):
+        self.fn_names = fn_names
+        self.fidx = fidx
+        self.scale = scale
+        self.depth = depth
+        self.root = root
+        self.children = children
+        self.members = members
+        self.n_roots = n_roots
+
+    def fused_names(self, row: int) -> Tuple[str, ...]:
+        return tuple(self.fn_names[f] for f, _s in self.members[row])
+
+
+def _expand_chains(load: LoadSpec, picks, rng,
+                   backend: str) -> Optional[_ChainTable]:
+    """Expand the root arrival stream into its chain-hop request table.
+
+    Returns ``None`` (consuming no rng state) when the load has no
+    chains.  Trigger draws — one ``rng.random()`` per sub-unit-prob edge,
+    in DFS order — are independent of the fusion plan, so a fused and an
+    unfused run of the same seed expand the identical hop tree and stay
+    row-for-row comparable."""
+    chains = load.chains
+    if not chains:
+        return None
+    fusion = load.fusion
+    fuse = fusion is not None and fusion.applies_to(backend)
+    names: List[str] = list(load.functions)
+    index = {nm: i for i, nm in enumerate(names)}
+
+    def fidx_of(nm: str) -> int:
+        i = index.get(nm)
+        if i is None:
+            index[nm] = i = len(names)
+            names.append(nm)
+        return i
+
+    picksL = picks.tolist() if hasattr(picks, "tolist") else list(picks)
+    n = len(picksL)
+    fidx = [int(p) for p in picksL]
+    scale = [1.0] * n
+    depth = [0] * n
+    root = list(range(n))
+    children: List[List[int]] = [[] for _ in range(n)]
+    members: List[List[Tuple[int, float]]] = [[] for _ in range(n)]
+    rand = rng.random
+
+    def walk(host: int, fn: str, sc: float, dp: int, r: int):
+        for e in chains.get(fn, ()):
+            if e.prob < 1.0 and rand() >= e.prob:
+                continue
+            cs = sc * e.payload_scale
+            if fuse and fusion.fuses(fn, e.target):
+                members[host].append((fidx_of(e.target), cs))
+                walk(host, e.target, cs, dp + 1, r)
+            else:
+                c = len(fidx)
+                fidx.append(fidx_of(e.target))
+                scale.append(cs)
+                depth.append(dp + 1)
+                root.append(r)
+                children.append([])
+                members.append([])
+                children[host].append(c)
+                walk(c, e.target, cs, dp + 1, r)
+
+    for i in range(n):
+        walk(i, load.functions[fidx[i]], 1.0, 0, i)
+    return _ChainTable(tuple(names), fidx, scale, depth, root, children,
+                       members, n)
+
+
+def _chain_result(table: _ChainTable, AT, done_t, EX, t_warm: float,
+                  rejected_hops: int) -> Dict[str, object]:
+    """Per-chain/per-hop breakdown (artifact schema v6 ``chain`` block).
+
+    Root end-to-end latency spans the root's arrival to the last
+    completion in its subtree; only past-warmup roots whose *entire*
+    expanded subtree completed count.  ``hops`` rows break latency and
+    the per-hop platform tax (latency minus the exec span — gateway +
+    netstack + queueing) down by hop depth; hop 0 is the root itself."""
+    dt = np.asarray(done_t)
+    root_ids = np.asarray(table.root)
+    depth = np.asarray(table.depth)
+    nr = table.n_roots
+    comp = dt > 0.0
+    exp_cnt = np.bincount(root_ids, minlength=nr)
+    comp_cnt = np.bincount(root_ids[comp], minlength=nr)
+    maxd = np.zeros(nr)
+    if comp.any():
+        np.maximum.at(maxd, root_ids[comp], dt[comp])
+    root_at = np.asarray(AT)[:nr]
+    full = (comp_cnt == exp_cnt) & comp[:nr] & (root_at >= t_warm)
+    root_lat = (maxd[full] - root_at[full]) * 1e3
+    s = LatencySummary.of(root_lat)
+    warm_row = comp & (np.asarray(AT) >= t_warm)
+    hops = []
+    tax_wsum = 0.0
+    tax_n = 0
+    for d in range(int(depth.max()) + 1 if len(depth) else 1):
+        m = warm_row & (depth == d)
+        nd = int(np.count_nonzero(m))
+        if nd == 0:
+            continue
+        hop_lat = (dt[m] - np.asarray(AT)[m]) * 1e3
+        hs = LatencySummary.of(hop_lat)
+        tax = float(np.mean(hop_lat - EX[m] * 1e3))
+        tax_wsum += tax * nd
+        tax_n += nd
+        hops.append({"hop": d, "n": nd,
+                     "median_ms": round(hs.median_ms, 6),
+                     "p99_ms": round(hs.p99_ms, 6),
+                     "mean_ms": round(hs.mean_ms, 6),
+                     "tax_mean_ms": round(tax, 6)})
+    return {
+        "n_roots": int(nr),
+        "roots_completed": int(np.count_nonzero(full)),
+        "root_median_ms": s.median_ms,
+        "root_p99_ms": s.p99_ms,
+        "root_mean_ms": s.mean_ms,
+        "hops": hops,
+        "hop_tax_mean_ms": (tax_wsum / tax_n) if tax_n else float("nan"),
+        "fused_members": int(sum(len(m) for m in table.members)),
+        "rejected_hops": int(rejected_hops),
+    }
 
 
 def drive(runtime: FaasdRuntime, load: LoadSpec,
@@ -408,7 +682,7 @@ def drive(runtime: FaasdRuntime, load: LoadSpec,
     automatically."""
     if engine not in ("events", "process"):
         raise ValueError(f"unknown engine {engine!r}")
-    for fn in load.functions:
+    for fn in _load_function_names(load):
         if fn not in runtime.functions:
             raise KeyError(f"function {fn!r} not deployed")
     obs = observer if observer is not None else _NULL_OBSERVER
@@ -469,6 +743,7 @@ def _drive_process(runtime: FaasdRuntime, load: LoadSpec,
     rel_times = load.arrivals.times(sim.rng, duration_s)
     picks = sim.rng.choice(len(fn_names), size=len(rel_times),
                            p=load.normalized_weights())
+    table = _expand_chains(load, picks, sim.rng, runtime.backend_name)
     outstanding = [0]
     admitted = [0]                  # admitted past-warmup arrivals: the
     # completed_frac denominator must count every admitted request, not
@@ -478,32 +753,84 @@ def _drive_process(runtime: FaasdRuntime, load: LoadSpec,
     # across rates, and a cumulative count would fail rejected==0 forever
     observed = obs is not _NULL_OBSERVER
 
-    def driver():
-        for rel_t, pick in zip(rel_times, picks):
-            yield sim.timeout(t0 + float(rel_t) - sim.now)
-            if outstanding[0] >= load.max_outstanding:
-                runtime.rejected += 1
-                continue
-            outstanding[0] += 1
-            if rel_t >= warmup_s:
-                admitted[0] += 1
-            if observed:
-                obs.on_arrival(fn_names[pick])
-
-            def one(fn=fn_names[pick]):
-                yield from runtime.invoke(fn)
-                outstanding[0] -= 1
+    if table is None:
+        def driver():
+            for rel_t, pick in zip(rel_times, picks):
+                yield sim.timeout(t0 + float(rel_t) - sim.now)
+                if outstanding[0] >= load.max_outstanding:
+                    runtime.rejected += 1
+                    continue
+                outstanding[0] += 1
+                if rel_t >= warmup_s:
+                    admitted[0] += 1
                 if observed:
-                    obs.on_done(fn)
+                    obs.on_arrival(fn_names[pick])
 
-            sim.process(one())
+                def one(fn=fn_names[pick]):
+                    yield from runtime.invoke(fn)
+                    outstanding[0] -= 1
+                    if observed:
+                        obs.on_done(fn)
+
+                sim.process(one())
+    else:
+        fn_names = table.fn_names
+        t_warm = t0 + warmup_s
+        n_rows = len(table.fidx)
+        AT = [0.0] * n_rows         # per-row spawn time (chain block)
+        done_t = [0.0] * n_rows
+        EX = [0.0] * n_rows         # recorded exec span (tax = e2e - EX)
+        hop_rejected = [0]
+
+        def one(row):
+            fn = fn_names[table.fidx[row]]
+            rec = yield from runtime.invoke(
+                fn, payload_scale=table.scale[row],
+                fused=table.fused_names(row))
+            done_t[row] = rec.t_done
+            EX[row] = rec.exec_latency
+            outstanding[0] -= 1
+            if observed:
+                obs.on_done(fn)
+            # the completed hop triggers its downstream edges: each child
+            # re-enters admission as a request of its own
+            for c in table.children[row]:
+                if outstanding[0] >= load.max_outstanding:
+                    runtime.rejected += 1
+                    hop_rejected[0] += 1
+                    continue
+                outstanding[0] += 1
+                if sim.now >= t_warm:
+                    admitted[0] += 1
+                if observed:
+                    obs.on_arrival(fn_names[table.fidx[c]])
+                AT[c] = sim.now
+                sim.process(one(c))
+
+        def driver():
+            for row, rel_t in enumerate(rel_times):
+                yield sim.timeout(t0 + float(rel_t) - sim.now)
+                if outstanding[0] >= load.max_outstanding:
+                    runtime.rejected += 1
+                    continue
+                outstanding[0] += 1
+                if rel_t >= warmup_s:
+                    admitted[0] += 1
+                if observed:
+                    obs.on_arrival(fn_names[table.fidx[row]])
+                AT[row] = sim.now
+                sim.process(one(row))
 
     start_idx = len(runtime.records)
     sim.process(driver())
     sim.run(until=t0 + duration_s + load.drain_s)
-    return _assemble(runtime, start_idx, fn_names, t0, duration_s, warmup_s,
-                     load.drain_s, admitted[0], rejected0,
-                     len(rel_times) / max(duration_s, 1e-9))
+    res = _assemble(runtime, start_idx, fn_names, t0, duration_s, warmup_s,
+                    load.drain_s, admitted[0], rejected0,
+                    len(rel_times) / max(duration_s, 1e-9))
+    if table is not None:
+        res["chain"] = _chain_result(table, AT, done_t, np.asarray(EX),
+                                     t0 + warmup_s, hop_rejected[0])
+    return res
 
 
 # The event engine's kernel-bypass analog: when a routed pool is
@@ -545,6 +872,58 @@ def _sample_request_matrices(runtime_of, fn_names, picks, rng, n):
         stack_cpu[f] = plan.stack_cpu_s
         n_hic[f] = hic
     return H, G, OFF, EX, stack_cpu, n_hic
+
+
+def _sample_chain_matrices(runtime_of, table: _ChainTable, rng):
+    """Vectorized per-row cost matrices for a chained run.  Rows group
+    by ``(function, payload_scale)`` — a hop's plan depends on its
+    scaled payload — and fused members append their exec-only cost to
+    the host row (exec-station CPU, tail hiccup on the egress gap).
+
+    Returns ``(H, G, OFF, EX, SC, n_hic)``: the per-row matrices of
+    :func:`_sample_request_matrices` plus ``SC``, the per-row netstack
+    CPU (scale-dependent, so per-function constants no longer work),
+    and per-function net-hiccup counts.  Fused members book no netstack
+    cost at all — they never touch the stack."""
+    fn_names = table.fn_names
+    picks = np.asarray(table.fidx, dtype=np.intp)
+    scales = np.asarray(table.scale, dtype=np.float64)
+    N = int(picks.size)
+    H = np.empty((N, 3))
+    G = np.empty((N, 2))
+    OFF = np.empty(N)
+    EX = np.empty(N)
+    SC = np.empty(N)
+    n_hic = [0] * len(fn_names)
+    for f, nm in enumerate(fn_names):
+        fmask = picks == f
+        if not fmask.any():
+            continue
+        for s in sorted(set(scales[fmask].tolist())):
+            m2 = fmask & (scales == s)
+            m = int(m2.sum())
+            plan = runtime_of(nm).invocation_plan(nm, payload_scale=s)
+            h, g, off, ex, hic = plan.sample(rng, m)
+            H[m2] = h
+            G[m2] = g
+            OFF[m2] = off
+            EX[m2] = ex
+            SC[m2] = plan.stack_cpu_s
+            n_hic[f] += hic
+    by_f: Dict[int, List[int]] = {}
+    for host, ms in enumerate(table.members):
+        for fm, _s in ms:
+            by_f.setdefault(fm, []).append(host)
+    for fm in sorted(by_f):
+        hosts = by_f[fm]
+        nm = fn_names[fm]
+        plan = runtime_of(nm).invocation_plan(nm)
+        cpu, hic = plan.sample_exec(rng, len(hosts))
+        for j, host in enumerate(hosts):
+            H[host, 1] += cpu[j]
+            G[host, 1] += hic[j]
+            EX[host] += cpu[j] + hic[j]
+    return H, G, OFF, EX, SC, n_hic
 
 
 def _fused_arrays(AT, H, G, OFF, EX):
@@ -648,22 +1027,38 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
     t0 = sim.now
     rel = load.arrivals.times(sim.rng, duration_s)
     n = len(rel)
-    if len(fn_names) > 1:
+    if len(fn_names) > 1 or load.chains is not None:
+        # chained runs always draw picks so the trigger-draw stream
+        # that follows stays aligned with the process engine's
         picks = sim.rng.choice(len(fn_names), size=n,
                                p=load.normalized_weights())
     else:
         picks = np.zeros(n, dtype=np.intp)
+    table = _expand_chains(load, picks, sim.rng, runtime.backend_name)
 
     AT = t0 + rel
-    H, G, OFF, EX, stack_cpu, n_hic = _sample_request_matrices(
-        lambda _nm: runtime, fn_names, picks, sim.rng, n)
     stack = runtime.stack
-    for f in range(len(fn_names)):
-        m = int((picks == f).sum()) if len(fn_names) > 1 else n
-        # netstack accounting the per-request path would have done
-        stack.messages += 4 * m
-        stack.cpu_spent += m * stack_cpu[f]
-        stack.hiccups += n_hic[f]
+    if table is None:
+        N = n
+        H, G, OFF, EX, stack_cpu, n_hic = _sample_request_matrices(
+            lambda _nm: runtime, fn_names, picks, sim.rng, n)
+        for f in range(len(fn_names)):
+            m = int((picks == f).sum()) if len(fn_names) > 1 else n
+            # netstack accounting the per-request path would have done
+            stack.messages += 4 * m
+            stack.cpu_spent += m * stack_cpu[f]
+            stack.hiccups += n_hic[f]
+    else:
+        fn_names = table.fn_names
+        picks = np.asarray(table.fidx, dtype=np.intp)
+        N = int(picks.size)
+        H, G, OFF, EX, SC, n_hic = _sample_chain_matrices(
+            lambda _nm: runtime, table, sim.rng)
+        # every table row (root or hop) is one request on this stack;
+        # fused members contribute nothing (SC covers rows only)
+        stack.messages += 4 * N
+        stack.cpu_spent += float(SC.sum())
+        stack.hiccups += sum(n_hic)
 
     # flat structure-of-arrays buffers: one list per column (station
     # holds indexed 3*i+k, gaps 2*i+k) — Python float access without the
@@ -671,13 +1066,28 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
     H3 = H.ravel().tolist()
     G2 = G.ravel().tolist()
     OFFL = OFF.tolist()
-    ATL = AT.tolist()
     picksL = picks.tolist()
-    ENDL, OFFENDL, CPUL, EXSL, EXEL = _fused_arrays(AT, H, G, OFF, EX)
-    # exec-span start: fused requests keep the precomputed uncontended
-    # value; the station machine overwrites it with the actual exec grant
-    ex_start = list(EXSL)
-    done_t = [0.0] * n              # completion time; 0.0 = not completed
+    if table is None:
+        ATL = AT.tolist()
+        rootATL = ATL
+        ENDL, OFFENDL, CPUL, EXSL, EXEL = _fused_arrays(AT, H, G, OFF, EX)
+        # exec-span start: fused requests keep the precomputed
+        # uncontended value; the station machine overwrites it with the
+        # actual exec grant
+        ex_start = list(EXSL)
+    else:
+        # a hop's arrival time is only known when its parent completes:
+        # keep the fused timeline *relative* and let _enter stamp the
+        # absolute values at spawn
+        rootATL = AT.tolist()
+        ATL = [0.0] * N
+        SPANL = (H.sum(axis=1) + G.sum(axis=1)).tolist()
+        OFFRELL = (H[:, 0] + OFF).tolist()
+        H0G0L = (H[:, 0] + G[:, 0]).tolist()
+        ENDL = [0.0] * N
+        OFFENDL = [0.0] * N
+        ex_start = [0.0] * N
+    done_t = [0.0] * N              # completion time; 0.0 = not completed
 
     # The station machine below inlines CorePool.acquire_fast /
     # release_fast field-for-field (busy/_waiters/_queued_weight stay
@@ -713,7 +1123,11 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
     served = 0
     rejected = 0
     rejected_warm = 0
-    fused = bytearray(n)            # fused admits; accounted post-loop
+    entered = 0                     # chained runs: rows that arrived
+    entered_warm = 0
+    hop_rejected = 0
+    CHILD = table.children if table is not None else None
+    fused = bytearray(N)            # fused admits; accounted post-loop
 
     def _admit(i, t):
         # per-request totals that nothing reads mid-run (cache_hits,
@@ -775,9 +1189,13 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
         if waiters:
             grant_next()
         outstanding -= 1
-        done_t[i] = ENDL[i]
+        end = ENDL[i]
+        done_t[i] = end
         if observed:
             obs.on_done(fn_names[picksL[i]])
+        if CHILD is not None:
+            for c in CHILD[i]:
+                _enter(c, end)
 
     def _complete(i, k, eff, start):
         # release the station's core (event time is always start + eff)
@@ -794,6 +1212,9 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
             done_t[i] = now
             if observed:
                 obs.on_done(fn_names[picksL[i]])
+            if CHILD is not None:
+                for c in CHILD[i]:
+                    _enter(c, now)
             return
         while off_pend and off_pend[0] <= now:  # expired lazy releases
             hpop(off_pend)
@@ -874,7 +1295,34 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
         if waiters:
             grant_next()
 
-    delivered = EventLoop(sim).run(t0 + duration_s + drain_s, ATL, _admit)
+    if table is not None:
+        DEPTHL = table.depth
+        SPANL_ = SPANL
+        OFFRELL_ = OFFRELL
+        H0G0L_ = H0G0L
+
+        def _enter(i, t):
+            # a root arrival or a spawned chain hop: stamp its absolute
+            # fused timeline, then take the normal admission path
+            nonlocal entered, entered_warm, hop_rejected
+            ATL[i] = t
+            ENDL[i] = t + SPANL_[i]
+            OFFENDL[i] = t + OFFRELL_[i]
+            ex_start[i] = t + H0G0L_[i]
+            entered += 1
+            if t >= t_warm:
+                entered_warm += 1
+            r0 = rejected
+            _admit(i, t)
+            if rejected > r0 and DEPTHL[i]:
+                hop_rejected += 1
+
+        delivered = EventLoop(sim).run(t0 + duration_s + drain_s,
+                                       rootATL, _enter)
+    else:
+        _enter = None
+        delivered = EventLoop(sim).run(t0 + duration_s + drain_s,
+                                       ATL, _admit)
     # deferred per-request accounting: every delivered non-rejected
     # arrival is one warm cached resolve; a fused request whose single
     # completion event fired (done_t set — straddlers past the drain
@@ -885,14 +1333,24 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
     pool.busy_time += busy_time + float((H.sum(axis=1) + OFF)[fmask].sum())
     pool.served += served + int(3 * fmask.sum()
                                 + np.count_nonzero(fmask & (OFF > 0.0)))
-    runtime.cache_hits += delivered - rejected
+    if table is None:
+        runtime.cache_hits += delivered - rejected
+        admitted = (int(np.count_nonzero(AT[:delivered] >= t_warm))
+                    - rejected_warm)
+    else:
+        # roots and hops alike: each admitted row did one warm resolve
+        runtime.cache_hits += entered - rejected
+        admitted = entered_warm - rejected_warm
+        AT = np.asarray(ATL)
     runtime.rejected += rejected
-    admitted = (int(np.count_nonzero(AT[:delivered] >= t_warm))
-                - rejected_warm)
     _append_records(records, fn_names, picksL, ATL, ex_start, EX, done_t)
-    return _events_result(fn_names, picks, AT, done_t, t0, duration_s,
-                          warmup_s, drain_s, admitted, rejected,
-                          n / max(duration_s, 1e-9))
+    res = _events_result(fn_names, picks, AT, done_t, t0, duration_s,
+                         warmup_s, drain_s, admitted, rejected,
+                         n / max(duration_s, 1e-9))
+    if table is not None:
+        res["chain"] = _chain_result(table, AT, done_t, EX, t_warm,
+                                     hop_rejected)
+    return res
 
 
 def run_mixed_open_loop(runtime: FaasdRuntime, fn_names: Sequence[str],

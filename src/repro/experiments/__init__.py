@@ -5,6 +5,7 @@
 from repro.experiments.artifacts import (build_artifact, latency_histogram,
                                          metric_row, metrics_csv,
                                          validate_artifact, write_artifact)
+from repro.core.workload import ChainEdge, FusionPlan
 from repro.experiments.runner import ExperimentRunner
 from repro.experiments.scenario import (DEFAULT_BACKENDS,
                                         DEFAULT_CLAIMS_PAIR, ArrivalSpec,
@@ -16,8 +17,8 @@ from repro.experiments.suites import (SMOKE_DURATION_SCALE, SUITES,
                                       get_suite)
 
 __all__ = [
-    "ArrivalSpec", "AutoscalerSpec", "FleetSpec", "FunctionProfile",
-    "Scenario", "SearchSpec", "zipf_mix",
+    "ArrivalSpec", "AutoscalerSpec", "ChainEdge", "FleetSpec",
+    "FunctionProfile", "FusionPlan", "Scenario", "SearchSpec", "zipf_mix",
     "DEFAULT_BACKENDS", "DEFAULT_CLAIMS_PAIR",
     "ExperimentRunner",
     "build_artifact", "latency_histogram", "metric_row", "metrics_csv",

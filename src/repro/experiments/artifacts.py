@@ -37,8 +37,13 @@ import numpy as np
 # timelines, autoscaler reaction summaries).  When the scenario compares
 # tree vs naive distribution the block also carries
 # ``tree_provisioning_speedup`` (naive/tree time-to-full-capacity).
-SCHEMA_VERSION = 5
-_SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3, 4, 5)
+# v6: chain mode — a per-backend result with ``mode == "chain"`` must
+# carry a ``chain`` block (root counts, root latency percentiles, and
+# per-hop-depth rows with the per-hop platform tax) and may carry a
+# ``fusion`` block (the fused-run chain block plus the fused-vs-unfused
+# ``p99_improvement`` and ``pool_efficiency`` ratios).
+SCHEMA_VERSION = 6
+_SUPPORTED_SCHEMA_VERSIONS = (1, 2, 3, 4, 5, 6)
 
 _REQUIRED_TOP = ("schema_version", "suite", "duration_scale", "scenarios",
                  "metrics", "failures", "meta")
@@ -52,6 +57,10 @@ _REQUIRED_SEARCH = ("spec", "n_probes", "knee_rps_per_seed", "converged",
 _REQUIRED_FLEET = ("n_workers", "placement", "distribution", "variants")
 _REQUIRED_FLEET_VARIANT = ("placement", "distribution", "workers")
 _REQUIRED_FLEET_WORKER = ("worker", "n", "placements")
+_REQUIRED_CHAIN = ("n_roots", "roots_completed", "root_median_ms",
+                   "root_p99_ms", "hop_tax_mean_ms", "hops")
+_REQUIRED_CHAIN_HOP = ("hop", "n", "median_ms", "p99_ms", "tax_mean_ms")
+_REQUIRED_FUSION = ("chain", "p99_improvement", "pool_efficiency")
 
 
 def latency_histogram(lat_ms: Sequence[float], n_bins: int = 24) -> Dict[str, list]:
@@ -121,6 +130,41 @@ def _fleet_problems(fleet: object) -> List[str]:
     return probs
 
 
+def _chain_problems(res: dict) -> List[str]:
+    """Schema problems inside one ``mode == "chain"`` per-backend result
+    (v6): the ``chain`` block is required, ``fusion`` optional."""
+    probs: List[str] = []
+    chain = res.get("chain")
+    if not isinstance(chain, dict):
+        return [".chain must be an object on chain-mode results"]
+
+    def block(prefix: str, blk: dict) -> None:
+        probs.extend(f"{prefix} missing {key!r}"
+                     for key in _REQUIRED_CHAIN if key not in blk)
+        hops = blk.get("hops")
+        if not isinstance(hops, list):
+            return
+        for j, row in enumerate(hops):
+            if not isinstance(row, dict) or any(key not in row
+                                                for key in _REQUIRED_CHAIN_HOP):
+                probs.append(f"{prefix}.hops[{j}] must have keys "
+                             f"{_REQUIRED_CHAIN_HOP}")
+
+    block(".chain", chain)
+    fusion = res.get("fusion")
+    if fusion is not None:
+        if not isinstance(fusion, dict):
+            probs.append(".fusion must be an object")
+        else:
+            probs.extend(f".fusion missing {key!r}"
+                         for key in _REQUIRED_FUSION if key not in fusion)
+            if isinstance(fusion.get("chain"), dict):
+                block(".fusion.chain", fusion["chain"])
+            elif "chain" in fusion:
+                probs.append(".fusion.chain must be an object")
+    return probs
+
+
 def validate_artifact(doc: Dict[str, object]) -> None:
     """Raise ValueError describing every schema violation found."""
     problems: List[str] = []
@@ -154,7 +198,7 @@ def validate_artifact(doc: Dict[str, object]) -> None:
                                         "must be an object")
                         continue
                     asc = res.get("autoscaler")
-                    if version in (3, 4, 5) and asc is not None:
+                    if version in (3, 4, 5, 6) and asc is not None:
                         if not isinstance(asc, dict):
                             problems.append(f"scenarios[{i}].backends[{b}]"
                                             ".autoscaler must be an object")
@@ -165,7 +209,7 @@ def validate_artifact(doc: Dict[str, object]) -> None:
                                         f"scenarios[{i}].backends[{b}]"
                                         f".autoscaler missing {key!r}")
                     search = res.get("search")
-                    if version in (4, 5) and search is not None:
+                    if version in (4, 5, 6) and search is not None:
                         if not isinstance(search, dict):
                             problems.append(f"scenarios[{i}].backends[{b}]"
                                             ".search must be an object")
@@ -176,10 +220,14 @@ def validate_artifact(doc: Dict[str, object]) -> None:
                                         f"scenarios[{i}].backends[{b}]"
                                         f".search missing {key!r}")
                     fleet = res.get("fleet")
-                    if version == 5 and fleet is not None:
+                    if version in (5, 6) and fleet is not None:
                         problems.extend(
                             f"scenarios[{i}].backends[{b}]{p}"
                             for p in _fleet_problems(fleet))
+                    if version == 6 and res.get("mode") == "chain":
+                        problems.extend(
+                            f"scenarios[{i}].backends[{b}]{p}"
+                            for p in _chain_problems(res))
             else:
                 problems.append(f"scenarios[{i}].backends must be an object")
             backend_set = sc.get("backend_set")

@@ -735,8 +735,105 @@ def _exec_fleet(sc: Scenario, backend: str, duration_scale: float,
     return out
 
 
+def _pool_chain(blocks: List[dict]) -> Dict[str, object]:
+    """Reduce per-seed chain blocks into one: counters summed, latency
+    stats seed-averaged, per-hop-depth rows matched by depth."""
+    out: Dict[str, object] = {
+        "n_roots": int(sum(b["n_roots"] for b in blocks)),
+        "roots_completed": int(sum(b["roots_completed"] for b in blocks)),
+        "rejected_hops": int(sum(b["rejected_hops"] for b in blocks)),
+        "fused_members": int(sum(b["fused_members"] for b in blocks)),
+    }
+    for key in ("root_median_ms", "root_p99_ms", "root_mean_ms",
+                "hop_tax_mean_ms"):
+        out[key] = round(_finite_mean([b[key] for b in blocks]), 6)
+    hops: List[dict] = []
+    for d in sorted({r["hop"] for b in blocks for r in b["hops"]}):
+        rows = [r for b in blocks for r in b["hops"] if r["hop"] == d]
+        hops.append({
+            "hop": d,
+            "n": int(sum(r["n"] for r in rows)),
+            **{k: round(_finite_mean([r[k] for r in rows]), 6)
+               for k in ("median_ms", "p99_ms", "mean_ms", "tax_mean_ms")},
+        })
+    out["hops"] = hops
+    return out
+
+
+def _chain_run(sc: Scenario, backend: str, seed: int, rate: float,
+               duration: float, fusion) -> Dict[str, object]:
+    """One fresh-runtime chain run; records the core pool's busy time so
+    fused and unfused runs can compare worker-side CPU cost."""
+    sim = Simulator(seed=seed)
+    rt = FaasdRuntime(sim, backend=backend, n_cores=sc.n_cores)
+    _deploy_mix(rt, sc.functions)
+    res = drive(rt, sc.load_spec(rate, duration, fusion=fusion))
+    res["pool_busy_s"] = float(rt.cores.busy_time)
+    return res
+
+
+def _exec_chain(sc: Scenario, backend: str, duration_scale: float,
+                smoke: bool) -> Dict[str, object]:
+    """Chain mode: each admitted root arrival expands into its downstream
+    hop tree (FunctionProfile.edges), so per-hop latency breakdowns and
+    the per-hop platform tax land in the artifact.  When the scenario
+    carries a FusionPlan that applies to this backend, a same-seed fused
+    run rides along: fused hops skip gateway + netstack and execute
+    inside the caller's sandbox, and the result block carries the
+    fused-vs-unfused P99 and pool-efficiency comparison."""
+    duration = max(0.5, sc.duration_s * duration_scale)
+    rates = sc.rates_for(backend, smoke=smoke)
+    if not rates:
+        raise ValueError(
+            f"scenario {sc.name!r} has no rate grid for backend "
+            f"{backend!r}; add rates[{backend!r}] or a '*' fallback")
+    rate = float(rates[0])
+    per_seed: List[Dict[str, object]] = []
+    fused_seed: List[Dict[str, object]] = []
+    pooled: List[float] = []
+    run_fused = sc.fusion is not None and sc.fusion.applies_to(backend)
+    for seed in _seeds(sc, smoke):
+        res = _chain_run(sc, backend, seed, rate, duration, fusion=None)
+        pooled.extend(res["latencies_ms"])
+        per_seed.append(res)
+        if run_fused:
+            fused_seed.append(_chain_run(sc, backend, seed, rate, duration,
+                                         fusion=sc.fusion))
+    chain = _pool_chain([r["chain"] for r in per_seed])
+    out: Dict[str, object] = {
+        "mode": "chain",
+        "duration_s": duration,
+        "rate_rps": rate,
+        "arrival_kind": sc.arrival.kind,
+        "n": int(sum(r["n"] for r in per_seed)),
+        "median_ms": _mean([r["median_ms"] for r in per_seed]),
+        "p99_ms": _mean([r["p99_ms"] for r in per_seed]),
+        "mean_ms": _mean([r["mean_ms"] for r in per_seed]),
+        "rejected": int(sum(r["rejected"] for r in per_seed)),
+        "chain": chain,
+        "hist": latency_histogram(pooled),
+    }
+    if fused_seed:
+        fchain = _pool_chain([r["chain"] for r in fused_seed])
+        busy_u = sum(r["pool_busy_s"] for r in per_seed)
+        busy_f = sum(r["pool_busy_s"] for r in fused_seed)
+        out["fusion"] = {
+            "edges": [list(e) for e in sc.fusion.edges],
+            "chain": fchain,
+            "p99_improvement": round(
+                chain["root_p99_ms"] / max(fchain["root_p99_ms"], 1e-9), 4),
+            "median_improvement": round(
+                chain["root_median_ms"]
+                / max(fchain["root_median_ms"], 1e-9), 4),
+            "pool_busy_unfused_s": round(busy_u, 6),
+            "pool_busy_fused_s": round(busy_f, 6),
+            "pool_efficiency": round(busy_u / max(busy_f, 1e-9), 4),
+        }
+    return out
+
+
 _MODES = {"closed": _exec_closed, "open": _exec_open, "storm": _exec_storm,
-          "mixed": _exec_mixed, "fleet": _exec_fleet}
+          "mixed": _exec_mixed, "fleet": _exec_fleet, "chain": _exec_chain}
 
 
 def _run_backend(item: Tuple[Scenario, str, float, bool]):
@@ -894,9 +991,51 @@ def _fleet_claims(base: dict, treat: dict) -> Dict[str, dict]:
     }
 
 
+def _chain_claims(base: dict, treat: dict) -> Dict[str, dict]:
+    """Per-hop platform tax (hop latency minus exec span): the chain-tax
+    claim is that the treatment's kernel-bypass datapath pays a fraction
+    of the baseline's per-hop overhead, so deep pipelines compound the
+    advantage."""
+    b, t = base["chain"], treat["chain"]
+    b_tax, t_tax = b["hop_tax_mean_ms"], t["hop_tax_mean_ms"]
+    return {
+        "baseline_hop_tax_ms": {"measured": round(b_tax, 4)},
+        "treatment_hop_tax_ms": {"measured": round(t_tax, 4)},
+        "chain_hop_tax_ratio": {"measured": round(b_tax / max(t_tax, 1e-9), 3)},
+        "baseline_root_median_ms": {"measured": round(b["root_median_ms"], 4)},
+        "treatment_root_median_ms": {"measured": round(t["root_median_ms"], 4)},
+        "baseline_root_p99_ms": {"measured": round(b["root_p99_ms"], 4)},
+        "treatment_root_p99_ms": {"measured": round(t["root_p99_ms"], 4)},
+    }
+
+
+def _chain_fusion_claims(base: dict, treat: dict) -> Dict[str, dict]:
+    """Platform-side fusion claim: co-locating chain edges into the
+    caller's sandbox removes per-hop gateway + netstack cost.  The
+    headline improvement is measured on the *baseline* (containerd-class)
+    backend, where per-hop overhead — and therefore the win — is
+    largest."""
+    b_f, t_f = base["fusion"], treat["fusion"]
+    return {
+        "chain_fusion_p99_improvement": {
+            "measured": round(b_f["p99_improvement"], 3)},
+        "treatment_fusion_p99_improvement": {
+            "measured": round(t_f["p99_improvement"], 3)},
+        "chain_fusion_pool_efficiency": {
+            "measured": round(b_f["pool_efficiency"], 3)},
+        "baseline_unfused_root_p99_ms": {
+            "measured": round(base["chain"]["root_p99_ms"], 4)},
+        "baseline_fused_root_p99_ms": {
+            "measured": round(b_f["chain"]["root_p99_ms"], 4)},
+        "baseline_median_improvement": {
+            "measured": round(b_f["median_improvement"], 3)},
+    }
+
+
 _CLAIMS = {"fig5": _fig5_claims, "fig6": _fig6_claims,
            "coldstart": _coldstart_claims, "autoscale": _autoscale_claims,
-           "interference": _interference_claims, "fleet": _fleet_claims}
+           "interference": _interference_claims, "fleet": _fleet_claims,
+           "chain": _chain_claims, "chain_fusion": _chain_fusion_claims}
 
 
 def _claim_metric_rows(sc: Scenario, backends: Dict[str, dict],
@@ -978,6 +1117,30 @@ def _claim_metric_rows(sc: Scenario, backends: Dict[str, dict],
             metric_row("mixed_interference_reduction",
                        claims["interference_reduction"]["measured"],
                        f"x {base_name}/{treat_name} p99 inflation"),
+        ]
+    elif sc.claims_kind == "chain":
+        rows += [
+            metric_row(f"chain_{base_name}_hop_tax",
+                       claims["baseline_hop_tax_ms"]["measured"] * 1e3,
+                       "us per-hop platform overhead"),
+            metric_row(f"chain_{treat_name}_hop_tax",
+                       claims["treatment_hop_tax_ms"]["measured"] * 1e3,
+                       "us per-hop platform overhead"),
+            metric_row("chain_hop_tax_ratio",
+                       claims["chain_hop_tax_ratio"]["measured"],
+                       f"x {base_name}/{treat_name} per-hop tax"),
+        ]
+    elif sc.claims_kind == "chain_fusion":
+        rows += [
+            metric_row("chain_fusion_p99_improvement",
+                       claims["chain_fusion_p99_improvement"]["measured"],
+                       f"x unfused/fused root p99 ({base_name})"),
+            metric_row("chain_fusion_pool_efficiency",
+                       claims["chain_fusion_pool_efficiency"]["measured"],
+                       f"x unfused/fused pool busy-time ({base_name})"),
+            metric_row(f"chain_fusion_{treat_name}_p99_improvement",
+                       claims["treatment_fusion_p99_improvement"]["measured"],
+                       "x unfused/fused root p99"),
         ]
     elif sc.claims_kind == "fleet":
         rows += [

@@ -16,9 +16,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.autoscaler import (LeadTimePolicy, QueueDepthPolicy,
                                    ScalePolicy)
 from repro.core.latency import AES_600B_WORK_US
-from repro.core.workload import (ArrivalProcess, BurstyArrivals,
-                                 DiurnalArrivals, LoadSpec, PoissonArrivals,
-                                 TraceReplay)
+from repro.core.workload import (ArrivalProcess, BurstyArrivals, ChainEdge,
+                                 DiurnalArrivals, FusionPlan, LoadSpec,
+                                 PoissonArrivals, TraceReplay)
 
 # Default matrix: the paper's pair.  Scenarios can widen this to any set
 # of registered backend names (see repro.core.backends), and the runner
@@ -35,6 +35,12 @@ class FunctionProfile:
     ``work_us`` is the median per-invocation CPU cost; when
     ``heavy_tail_alpha`` is set the runner replaces the constant with a
     Pareto sampler of that shape pinned to the same median.
+
+    ``edges`` names the function's downstream chain edges
+    (:class:`~repro.core.workload.ChainEdge`): completing an invocation
+    triggers each edge's target with its probability, making the mix a
+    chain/DAG workload.  Chain-only targets (weight 0) still belong in
+    the scenario's ``functions`` so they get deployed.
     """
     name: str
     work_us: float = AES_600B_WORK_US
@@ -44,6 +50,7 @@ class FunctionProfile:
     scale: int = 1
     max_cores: int = 2
     heavy_tail_alpha: Optional[float] = None
+    edges: Tuple[ChainEdge, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -233,6 +240,11 @@ class Scenario:
         ``rates[backend][0]`` **per worker**, optional mid-run
         provisioning storm with image distribution (FaaSNet regime),
         placement/distribution variants side by side.
+      * ``chain``  — chained/DAG traffic at ``rates[backend][0]``: the
+        mix's ``edges`` expand each root arrival into its chain of
+        hops; when ``fusion`` is set the same seeds also run fused
+        (selected edges co-located in the caller's sandbox) and the
+        result carries the fused-vs-unfused comparison.
 
     An optional ``autoscaler`` spec puts a backend-aware autoscaler in
     the control loop of ``open``/``mixed`` runs; its scale-event
@@ -255,6 +267,7 @@ class Scenario:
     slo_p99_ms: float = 10.0
     storm_functions: int = 16
     fleet: Optional[FleetSpec] = None     # mode="fleet" topology
+    fusion: Optional[FusionPlan] = None   # mode="chain" fusion pass
     autoscaler: Optional[AutoscalerSpec] = None
     backends: Tuple[str, ...] = DEFAULT_BACKENDS
     # (baseline, treatment) pair the paper-claim reductions are computed
@@ -281,14 +294,25 @@ class Scenario:
     def fn_names(self) -> List[str]:
         return [f.name for f in self.functions]
 
-    def load_spec(self, rate: float, duration_s: float) -> LoadSpec:
+    def chain_edges(self) -> Dict[str, Tuple[ChainEdge, ...]]:
+        """The mix's chain graph: function name -> downstream edges
+        (empty when no profile declares edges)."""
+        return {p.name: tuple(p.edges) for p in self.functions if p.edges}
+
+    def load_spec(self, rate: float, duration_s: float,
+                  fusion: Optional[FusionPlan] = None) -> LoadSpec:
         """The :func:`repro.core.workload.drive` load for one open-loop
-        run of this scenario at ``rate`` (mix, arrivals, warmup)."""
+        run of this scenario at ``rate`` (mix, arrivals, warmup, and —
+        when the mix declares edges — its chain graph).  ``fusion``
+        optionally applies a fusion pass to the chained load."""
+        chains = self.chain_edges()
         return LoadSpec(arrivals=self.arrival.build(rate),
                         functions=tuple(self.fn_names()),
                         weights=tuple(self.weights()),
                         duration_s=duration_s,
-                        warmup_frac=self.warmup_frac)
+                        warmup_frac=self.warmup_frac,
+                        chains=chains or None,
+                        fusion=fusion)
 
     def rates_for(self, backend: str, smoke: bool = False) -> Sequence[float]:
         """Rate grid for one backend; the ``"*"`` key is the fallback grid

@@ -16,6 +16,7 @@ import os
 from typing import Dict, List
 
 from repro.core.latency import AES_600B_WORK_US
+from repro.core.workload import ChainEdge, FusionPlan
 from repro.experiments.scenario import (ArrivalSpec, AutoscalerSpec,
                                         FleetSpec, FunctionProfile, Scenario,
                                         SearchSpec, zipf_mix)
@@ -62,6 +63,26 @@ def _trace_burst_train(n_bursts: int = 6, burst_n: int = 120,
         t0 = 0.05 + b * spacing_s
         out.extend(t0 + i * intra_gap_s for i in range(burst_n))
     return tuple(round(t, 6) for t in out)
+
+
+def _pipeline_mix() -> tuple:
+    """3-hop ingest -> transform -> store pipeline: only the root takes
+    gateway traffic (weight 1); the downstream hops are chain-only
+    targets (weight 0) that still deploy with the mix."""
+    return (
+        FunctionProfile("ingest", max_cores=8,
+                        edges=(ChainEdge("transform"),)),
+        FunctionProfile("transform", max_cores=8, weight=0.0,
+                        edges=(ChainEdge("store"),)),
+        FunctionProfile("store", max_cores=8, weight=0.0,
+                        response_bytes=128),
+    )
+
+
+_CHAIN_RATES = {"containerd": (300.0,), "junctiond": (900.0,),
+                "quark": (220.0,), "wasm": (400.0,),
+                "firecracker": (280.0,), "gvisor": (260.0,),
+                "*": (300.0,)}
 
 
 def build_scenarios() -> Dict[str, Scenario]:
@@ -237,6 +258,35 @@ def build_scenarios() -> Dict[str, Scenario]:
             duration_s=2.0, warmup_frac=0.15, seeds=(0,), slo_p99_ms=25.0,
             tags=("fleet", "multitenant", "diurnal", "autoscale")),
         Scenario(
+            name="chain-tax",
+            description="3-hop ingest->transform->store pipeline: every "
+                        "non-fused hop re-enters admission and pays the "
+                        "full gateway+netstack station walk, so the "
+                        "per-hop platform tax compounds with depth; "
+                        "claims the treatment's per-hop overhead is a "
+                        "fraction of the baseline's",
+            mode="chain", functions=_pipeline_mix(),
+            arrival=ArrivalSpec("poisson"),
+            rates=_CHAIN_RATES,
+            duration_s=2.0, warmup_frac=0.1, seeds=(0, 1),
+            slo_p99_ms=25.0, claims_kind="chain",
+            tags=("chain", "pipeline")),
+        Scenario(
+            name="chain-fused",
+            description="Same 3-hop pipeline with a FusionPlan co-locating "
+                        "both edges: fused hops skip gateway+netstack and "
+                        "run inside the caller's sandbox; gates on the "
+                        "end-to-end P99 improvement and pool efficiency "
+                        "of fusion on the baseline backend",
+            mode="chain", functions=_pipeline_mix(),
+            arrival=ArrivalSpec("poisson"),
+            fusion=FusionPlan(edges=(("ingest", "transform"),
+                                     ("transform", "store"))),
+            rates=_CHAIN_RATES,
+            duration_s=2.0, warmup_frac=0.1, seeds=(0, 1),
+            slo_p99_ms=25.0, claims_kind="chain_fusion",
+            tags=("chain", "pipeline", "fusion")),
+        Scenario(
             name="model-endpoint",
             description="Model decode steps as junctiond functions: how "
                         "much of an ms-scale endpoint budget the FaaS "
@@ -257,12 +307,16 @@ SUITES: Dict[str, List[str]] = {
                   "multi-tenant-mix", "bursty-burst", "diurnal-drift",
                   "heavy-tail-mix", "trace-replay", "autoscale-burst",
                   "autoscale-diurnal", "mixed-cold-warm", "fleet-storm",
-                  "fleet-zipf-diurnal", "model-endpoint"],
+                  "fleet-zipf-diurnal", "chain-tax", "chain-fused",
+                  "model-endpoint"],
     # short CI gate: same scenarios, smoke rates + scaled durations
     "smoke": ["paper-fig5", "paper-fig6", "cold-start-storm",
               "multi-tenant-mix", "bursty-burst", "diurnal-drift",
               "heavy-tail-mix", "autoscale-burst", "autoscale-diurnal",
-              "mixed-cold-warm", "fleet-storm", "model-endpoint"],
+              "mixed-cold-warm", "fleet-storm", "chain-tax", "chain-fused",
+              "model-endpoint"],
+    # the chain/fusion pair (pipeline workloads)
+    "chain": ["chain-tax", "chain-fused"],
     # just the paper's headline figures
     "paper": ["paper-fig5", "paper-fig6", "cold-start-storm"],
     # the control-plane trio (autoscaler-in-the-loop)

@@ -32,7 +32,8 @@ import repro.core.workload as _workload
 from repro.core.faas import InvocationPlan, InvocationRecord
 from repro.core.simulator import EventLoop
 from repro.core.workload import (LatencySummary, LoadSpec, NullObserver,
-                                 SimObserver, _fused_arrays)
+                                 SimObserver, _chain_result, _expand_chains,
+                                 _fused_arrays, _sample_chain_matrices)
 from repro.fleet.cluster import Cluster
 
 
@@ -66,47 +67,74 @@ def drive_cluster(cluster: Cluster, load: LoadSpec,
     t0 = sim.now
     rel = load.arrivals.times(sim.rng, duration_s)
     n = len(rel)
-    if n_fn > 1:
+    if n_fn > 1 or load.chains is not None:
+        # chained runs always draw picks so the trigger-draw stream
+        # that follows stays aligned with the single-runtime engines'
         picks = sim.rng.choice(n_fn, size=n, p=load.normalized_weights())
     else:
         picks = np.zeros(n, dtype=np.intp)
+    table = _expand_chains(load, picks, sim.rng,
+                           cluster.workers[0].runtime.backend_name)
 
     AT = t0 + rel
-    H = np.empty((n, 3))            # station CPU holds
-    G = np.empty((n, 2))            # inter-station latency gaps
-    OFF = np.empty(n)               # merged off-path CPU job
-    EX = np.empty(n)                # exec-span approximation for records
-    stack_cpu = [0.0] * n_fn
-    hic_of_fn = [0] * n_fn
-    for f, nm in enumerate(fn_names):
-        mask = picks == f
-        m = int(mask.sum())
-        if m == 0:
-            continue
-        plan = cluster.reference_runtime(nm).invocation_plan(nm)
-        h, g, off, ex, n_hic = plan.sample(sim.rng, m)
-        H[mask] = h
-        G[mask] = g
-        OFF[mask] = off
-        EX[mask] = ex
-        stack_cpu[f] = plan.stack_cpu_s
-        # hiccups are sampled per function batch, before routing is
-        # known; they are apportioned across the routed workers after
-        # the run (see below)
-        hic_of_fn[f] = n_hic
+    SC = None
+    if table is None:
+        N = n
+        H = np.empty((n, 3))        # station CPU holds
+        G = np.empty((n, 2))        # inter-station latency gaps
+        OFF = np.empty(n)           # merged off-path CPU job
+        EX = np.empty(n)            # exec-span approximation for records
+        stack_cpu = [0.0] * n_fn
+        hic_of_fn = [0] * n_fn
+        for f, nm in enumerate(fn_names):
+            mask = picks == f
+            m = int(mask.sum())
+            if m == 0:
+                continue
+            plan = cluster.reference_runtime(nm).invocation_plan(nm)
+            h, g, off, ex, n_hic = plan.sample(sim.rng, m)
+            H[mask] = h
+            G[mask] = g
+            OFF[mask] = off
+            EX[mask] = ex
+            stack_cpu[f] = plan.stack_cpu_s
+            # hiccups are sampled per function batch, before routing is
+            # known; they are apportioned across the routed workers
+            # after the run (see below)
+            hic_of_fn[f] = n_hic
+    else:
+        fn_names = table.fn_names
+        n_fn = len(fn_names)
+        picks = np.asarray(table.fidx, dtype=np.intp)
+        N = int(picks.size)
+        H, G, OFF, EX, SC, hic_of_fn = _sample_chain_matrices(
+            cluster.reference_runtime, table, sim.rng)
 
     # flat structure-of-arrays buffers (station holds indexed 3*i+k,
     # gaps 2*i+k) plus the precomputed fused timelines
     H3 = H.ravel().tolist()
     G2 = G.ravel().tolist()
     OFFL = OFF.tolist()
-    ATL = AT.tolist()
     picksL = picks.tolist()
-    ENDL, OFFENDL, CPUL, EXSL, EXEL = _fused_arrays(AT, H, G, OFF, EX)
-    ex_start = list(EXSL)           # station machine overwrites its rows
-    done_t = [0.0] * n              # completion time; 0.0 = not completed
-    wid_of = [-1] * n               # routed worker per request
-    fused = bytearray(n)            # fused admits; accounted post-loop
+    if table is None:
+        ATL = AT.tolist()
+        rootATL = ATL
+        ENDL, OFFENDL, CPUL, EXSL, EXEL = _fused_arrays(AT, H, G, OFF, EX)
+        ex_start = list(EXSL)       # station machine overwrites its rows
+    else:
+        # a hop's arrival time is only known when its parent completes:
+        # keep the fused timeline relative; _enter stamps the absolutes
+        rootATL = AT.tolist()
+        ATL = [0.0] * N
+        SPANL = (H.sum(axis=1) + G.sum(axis=1)).tolist()
+        OFFRELL = (H[:, 0] + OFF).tolist()
+        H0G0L = (H[:, 0] + G[:, 0]).tolist()
+        ENDL = [0.0] * N
+        OFFENDL = [0.0] * N
+        ex_start = [0.0] * N
+    done_t = [0.0] * N              # completion time; 0.0 = not completed
+    wid_of = [-1] * N               # routed worker per request
+    fused = bytearray(N)            # fused admits; accounted post-loop
 
     workers = cluster.workers
     n_workers = len(workers)
@@ -125,7 +153,9 @@ def drive_cluster(cluster: Cluster, load: LoadSpec,
     t_warm = t0 + warmup_s
     outstanding = 0
     admitted = 0
+    hop_rejected = 0
     rejected0 = cluster.rejected
+    CHILD = table.children if table is not None else None
     # admits per (function, worker): drives the deferred netstack
     # accounting and the hiccup apportionment
     fw_count = [0] * (n_fn * n_workers)
@@ -156,11 +186,15 @@ def drive_cluster(cluster: Cluster, load: LoadSpec,
         outstanding -= 1
         w = workers[wid]
         w.outstanding -= 1
-        done_t[i] = ENDL[i]
+        end = ENDL[i]
+        done_t[i] = end
         if autoscaled and w.autoscaler is not None:
             w.autoscaler.on_done(fn_names[picksL[i]])
         if observed:
             obs.on_done(fn_names[picksL[i]])
+        if CHILD is not None:
+            for c in CHILD[i]:
+                _enter(c, end)
 
     def _complete(i, k, eff, start):
         nonlocal outstanding
@@ -177,6 +211,9 @@ def drive_cluster(cluster: Cluster, load: LoadSpec,
                 w.autoscaler.on_done(fn_names[picksL[i]])
             if observed:
                 obs.on_done(fn_names[picksL[i]])
+            if CHILD is not None:
+                for c in CHILD[i]:
+                    _enter(c, now)
             return
         if k == 0:
             off = OFFL[i]
@@ -232,7 +269,29 @@ def drive_cluster(cluster: Cluster, load: LoadSpec,
                 return
         pool.acquire_fast(t, _grant, (i, 0), weight=st_weight)
 
-    EventLoop(sim).run(t0 + duration_s + drain_s, ATL, _admit)
+    if table is not None:
+        DEPTHL = table.depth
+        SPANL_ = SPANL
+        OFFRELL_ = OFFRELL
+        H0G0L_ = H0G0L
+
+        def _enter(i, t):
+            # a root arrival or a spawned chain hop: stamp its absolute
+            # fused timeline, then route through the gateway as usual
+            nonlocal hop_rejected
+            ATL[i] = t
+            ENDL[i] = t + SPANL_[i]
+            OFFENDL[i] = t + OFFRELL_[i]
+            ex_start[i] = t + H0G0L_[i]
+            r0 = cluster.rejected
+            _admit(i, t)
+            if cluster.rejected > r0 and DEPTHL[i]:
+                hop_rejected += 1
+
+        EventLoop(sim).run(t0 + duration_s + drain_s, rootATL, _enter)
+    else:
+        _enter = None
+        EventLoop(sim).run(t0 + duration_s + drain_s, ATL, _admit)
 
     # -- deferred per-request accounting --------------------------------
     dt = np.asarray(done_t)
@@ -241,6 +300,8 @@ def drive_cluster(cluster: Cluster, load: LoadSpec,
     CPU = H.sum(axis=1) + OFF
     exs = np.asarray(ex_start)
     ex_end = exs + EX
+    if table is not None:
+        AT = np.asarray(ATL)        # hops got their times at spawn
     comp = dt > 0.0
     warm = comp & (AT >= t_warm)
     lat_ms = (dt - AT) * 1e3
@@ -250,10 +311,15 @@ def drive_cluster(cluster: Cluster, load: LoadSpec,
         adm = sum(fw_count[f * n_workers + wid] for f in range(n_fn))
         rt.cache_hits += adm        # warm cached resolve per request
         rt.stack.messages += 4 * adm
-        rt.stack.cpu_spent += sum(
-            stack_cpu[f] * fw_count[f * n_workers + wid]
-            for f in range(n_fn))
         wmask = wids == wid
+        if SC is None:
+            rt.stack.cpu_spent += sum(
+                stack_cpu[f] * fw_count[f * n_workers + wid]
+                for f in range(n_fn))
+        else:
+            # chained runs: per-row netstack CPU (payload scales vary
+            # within a function), booked on the routed worker
+            rt.stack.cpu_spent += float(SC[wmask].sum())
         wf = fmask & wmask
         pool = pools[wid]
         pool.busy_time += float(CPU[wf].sum())
@@ -313,7 +379,10 @@ def drive_cluster(cluster: Cluster, load: LoadSpec,
             "median_ms": round(ws.median_ms, 4) if ws else None,
             "p99_ms": round(ws.p99_ms, 4) if ws else None,
         })
-    return {
+    chain_block = (None if table is None else
+                   _chain_result(table, AT, done_t, EX, t_warm,
+                                 hop_rejected))
+    res = {
         "offered_rps": n / max(duration_s, 1e-9),
         "achieved_rps": n_done / max(1e-9, duration_s - warmup_s),
         "completion_rps": completion_rps,
@@ -334,3 +403,6 @@ def drive_cluster(cluster: Cluster, load: LoadSpec,
             "expansions": list(gw.expansions),
         },
     }
+    if chain_block is not None:
+        res["chain"] = chain_block
+    return res

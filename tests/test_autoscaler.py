@@ -8,11 +8,10 @@ import dataclasses
 
 import pytest
 
-from repro.core import (Autoscaler, FaasdRuntime, FunctionSpec,
+from repro.core import (Autoscaler, FaasdRuntime, FunctionSpec, LoadSpec,
                         LeadTimePolicy, QueueDepthPolicy, ScalePolicy,
-                        Simulator, available_backends, get_backend_class,
-                        run_mixed_open_loop, run_open_loop, run_sequential,
-                        PoissonArrivals)
+                        Simulator, available_backends, drive,
+                        get_backend_class, run_sequential, PoissonArrivals)
 from repro.experiments import (AutoscalerSpec, ExperimentRunner,
                                build_artifact, get_scenario, get_suite,
                                metric_row, validate_artifact)
@@ -255,27 +254,43 @@ def test_cold_path_arrivals_counted_while_scaleup_in_flight():
 # Workload-driver hooks.
 
 
+class _TapObserver:
+    """Minimal SimObserver recording every hook dispatch."""
+
+    def __init__(self):
+        self.events = []
+
+    def on_arrival(self, fn_name):
+        self.events.append(("arr", fn_name))
+
+    def on_done(self, fn_name):
+        self.events.append(("done", fn_name))
+
+
 def test_open_loop_drivers_feed_hooks_balanced():
-    events = []
     rt = _runtime("junctiond", seed=5)
     rt.deploy_blocking(FunctionSpec(name="f"))
-    run_open_loop(rt, "f", rate_rps=500.0, duration_s=0.3,
-                  on_arrival=lambda fn: events.append(("arr", fn)),
-                  on_done=lambda fn: events.append(("done", fn)))
-    arrs = [e for e in events if e[0] == "arr"]
-    dones = [e for e in events if e[0] == "done"]
+    obs = _TapObserver()
+    drive(rt, LoadSpec.single("f", 500.0, duration_s=0.3, warmup_s=0.1),
+          observer=obs)
+    arrs = [e for e in obs.events if e[0] == "arr"]
+    dones = [e for e in obs.events if e[0] == "done"]
     assert len(arrs) > 50 and len(arrs) == len(dones)
-    assert {fn for _, fn in events} == {"f"}
+    assert {fn for _, fn in obs.events} == {"f"}
 
 
 def test_mixed_open_loop_hooks_see_the_picked_function():
     rt = _runtime("junctiond", seed=6)
     rt.deploy_blocking(FunctionSpec(name="a"))
     rt.deploy_blocking(FunctionSpec(name="b"))
+    obs = _TapObserver()
+    res = drive(rt, LoadSpec(PoissonArrivals(800.0), ("a", "b"),
+                             weights=(0.7, 0.3), duration_s=0.3),
+                observer=obs)
     counts = {}
-    res = run_mixed_open_loop(
-        rt, ["a", "b"], [0.7, 0.3], PoissonArrivals(800.0), duration_s=0.3,
-        on_arrival=lambda fn: counts.__setitem__(fn, counts.get(fn, 0) + 1))
+    for kind, fn in obs.events:
+        if kind == "arr":
+            counts[fn] = counts.get(fn, 0) + 1
     assert set(counts) == {"a", "b"}
     assert counts["a"] > counts["b"]
     assert sum(counts.values()) >= res["n"]     # hooks fire pre-warmup too
@@ -298,7 +313,7 @@ def test_autoscaler_spec_builds_policies():
 
 
 def test_schema_v3_validates_autoscaler_blocks():
-    assert SCHEMA_VERSION == 5
+    assert SCHEMA_VERSION == 6
     good_block = {"policy": "lead-time", "n_scale_events": 3,
                   "cold_starts": 2, "cold_path_arrivals": 5,
                   "reaction_p50_ms": 1.5}

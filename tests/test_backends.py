@@ -526,9 +526,13 @@ def test_validate_artifact_accepts_v1_and_v2_schemas():
     validate_artifact(v3)
     v4 = dict(v2, schema_version=4)
     validate_artifact(v4)
-    v6 = dict(v1, schema_version=6)
+    v5 = dict(v2, schema_version=5)
+    validate_artifact(v5)
+    v6 = dict(v2, schema_version=6)
+    validate_artifact(v6)
+    v7 = dict(v1, schema_version=7)
     with pytest.raises(ValueError, match="schema_version"):
-        validate_artifact(v6)
+        validate_artifact(v7)
 
 
 def test_rates_fall_back_to_wildcard_grid_with_warning():

@@ -1,0 +1,338 @@
+"""Function chains + platform-side fusion: ChainEdge/FusionPlan spec
+validation, chain expansion invariants (hypothesis-backed), events-vs-
+process engine agreement on chained mixes, fused-vs-unfused exact
+agreement when no edges fuse, the per-hop platform-tax ordering across
+the backend matrix (junctiond lowest — the chain-tax claim), fleet chain
+runs with gateway-routed cross-worker hops, and the schema-v6 chain
+artifact contract."""
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import (ChainEdge, FaasdRuntime, FunctionSpec, FusionPlan,
+                        LoadSpec, PoissonArrivals, Simulator, drive)
+from repro.core.workload import _expand_chains
+from repro.experiments import build_artifact, validate_artifact
+from repro.fleet import Cluster, Gateway, resolve_placement
+
+ALL_BACKENDS = ("containerd", "junctiond", "quark", "wasm",
+                "firecracker", "gvisor")
+
+
+def _runtime(backend, seed=0, n_cores=8):
+    sim = Simulator(seed=seed)
+    return FaasdRuntime(sim, backend=backend, n_cores=n_cores)
+
+
+def _deploy_pipeline(rt):
+    for name in ("ingest", "transform", "store"):
+        rt.deploy_blocking(FunctionSpec(name=name, max_cores=8))
+
+
+def _pipeline_load(rate=300.0, duration_s=0.6, fusion=None, p2=1.0,
+                   scale2=1.0, **kw):
+    chains = {"ingest": (ChainEdge("transform"),),
+              "transform": (ChainEdge("store", prob=p2,
+                                      payload_scale=scale2),)}
+    return LoadSpec(arrivals=PoissonArrivals(rate), functions=("ingest",),
+                    duration_s=duration_s, chains=chains, fusion=fusion,
+                    **kw)
+
+
+def _chain_run(backend, seed=0, engine="events", **load_kw):
+    rt = _runtime(backend, seed=seed)
+    _deploy_pipeline(rt)
+    res = drive(rt, _pipeline_load(**load_kw), engine=engine)
+    return rt, res
+
+
+# ---------------------------------------------------------------------------
+# Spec validation.
+
+
+def test_chain_edge_validation():
+    with pytest.raises(ValueError):
+        ChainEdge("")
+    with pytest.raises(ValueError):
+        ChainEdge("f", prob=0.0)
+    with pytest.raises(ValueError):
+        ChainEdge("f", prob=1.5)
+    with pytest.raises(ValueError):
+        ChainEdge("f", payload_scale=0.0)
+    e = ChainEdge("f", prob=0.5, payload_scale=2.0)
+    assert (e.target, e.prob, e.payload_scale) == ("f", 0.5, 2.0)
+
+
+def test_fusion_plan_normalizes_and_matches():
+    plan = FusionPlan(edges=(("a", "b"), ("a", "b"), ("b", "c")))
+    assert plan.fuses("a", "b") and plan.fuses("b", "c")
+    assert not plan.fuses("b", "a")
+    assert plan.applies_to("containerd")        # backends=None -> all
+    only = FusionPlan(edges=(("a", "b"),), backends=("containerd",))
+    assert only.applies_to("containerd") and not only.applies_to("junctiond")
+
+
+def test_loadspec_rejects_chain_cycles_and_orphan_fusion():
+    cyc = {"a": (ChainEdge("b"),), "b": (ChainEdge("a"),)}
+    with pytest.raises(ValueError, match="chain cycle"):
+        LoadSpec(arrivals=PoissonArrivals(10.0), functions=("a",),
+                 chains=cyc)
+    with pytest.raises(ValueError, match="chain cycle"):
+        LoadSpec(arrivals=PoissonArrivals(10.0), functions=("a",),
+                 chains={"a": (ChainEdge("a"),)})
+    with pytest.raises(ValueError, match="fusion requires chains"):
+        LoadSpec(arrivals=PoissonArrivals(10.0), functions=("a",),
+                 fusion=FusionPlan(edges=(("a", "b"),)))
+
+
+# ---------------------------------------------------------------------------
+# Expansion invariants (engine-independent, driven on the table directly).
+
+
+def _expand(seed, n_roots, p2=1.0, fusion=None):
+    load = _pipeline_load(p2=p2, fusion=fusion)
+    picks = np.zeros(n_roots, dtype=np.intp)
+    rng = np.random.default_rng(seed)
+    return _expand_chains(load, picks, rng, "containerd")
+
+
+def test_expansion_deterministic_and_prefix_closed():
+    a, b = _expand(7, 50, p2=0.6), _expand(7, 50, p2=0.6)
+    assert a.fidx == b.fidx and a.depth == b.depth and a.root == b.root
+    # prob-1.0 edges fire always, sub-unit ones only below their parent:
+    # hop counts are prefix-closed along the chain
+    n_by_depth = [a.depth.count(d) for d in (0, 1, 2)]
+    assert n_by_depth[0] == 50 == a.n_roots
+    assert n_by_depth[1] == 50                  # prob 1.0
+    assert 0 < n_by_depth[2] < 50               # prob 0.6, seed-dependent
+    assert sum(n_by_depth) == len(a.fidx)
+
+
+def test_expansion_is_independent_of_fusion_plan():
+    """Trigger draws must not depend on which edges fuse: same seed ->
+    the identical hop tree, fused hops just live in ``members``."""
+    plan = FusionPlan(edges=(("ingest", "transform"),))
+    a = _expand(3, 40, p2=0.5)
+    f = _expand(3, 40, p2=0.5, fusion=plan)
+    # unfused rows: roots + every triggered non-fused hop
+    assert f.n_roots == a.n_roots == 40
+    n_store_a = a.depth.count(2)
+    n_store_f = f.depth.count(2)
+    assert n_store_a == n_store_f               # identical trigger draws
+    assert sum(len(m) for m in f.members) == 40  # one fused hop per root
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       p2=st.floats(min_value=0.05, max_value=1.0))
+def test_expansion_invariants_hold_for_any_seed_and_prob(seed, p2):
+    t = _expand(seed, 30, p2=p2)
+    n = len(t.fidx)
+    assert t.n_roots == 30
+    assert len(t.depth) == len(t.root) == len(t.scale) == n
+    # every row's root is a real root row; depths start at 0 there
+    for i in range(n):
+        r = t.root[i]
+        assert 0 <= r < 30 and t.depth[r] == 0
+    # children link downward only and cover every non-root row once
+    seen = sorted(c for kids in t.children for c in kids)
+    assert seen == list(range(30, n))
+    for host, kids in enumerate(t.children):
+        for c in kids:
+            assert t.depth[c] == t.depth[host] + 1
+
+
+# ---------------------------------------------------------------------------
+# Engine agreement + determinism.
+
+
+def test_events_and_process_engines_agree_on_chains():
+    # pinned at a stable operating point: the engines draw different
+    # randomness realizations from the same seed, so near the pool's
+    # critical load one can tip into thrash collapse while the other
+    # does not (metastability, not a booking bug — busy_time agrees
+    # within ~2% at every uncontended rate)
+    for seed in (0, 3):
+        _, ev = _chain_run("containerd", seed=seed, engine="events",
+                           rate=200.0)
+        _, pr = _chain_run("containerd", seed=seed, engine="process",
+                           rate=200.0)
+        # same seed -> the identical expanded hop tree in both engines
+        assert ev["n"] == pr["n"] > 100
+        assert ev["chain"]["n_roots"] == pr["chain"]["n_roots"]
+        assert [h["n"] for h in ev["chain"]["hops"]] == \
+            [h["n"] for h in pr["chain"]["hops"]]
+        assert ev["median_ms"] == pytest.approx(pr["median_ms"], rel=0.10)
+        assert ev["chain"]["root_median_ms"] == \
+            pytest.approx(pr["chain"]["root_median_ms"], rel=0.10)
+
+
+def test_chain_run_same_seed_byte_identical():
+    _, a = _chain_run("containerd", seed=9, p2=0.7)
+    _, b = _chain_run("containerd", seed=9, p2=0.7)
+    assert a["latencies_ms"] == b["latencies_ms"]
+    assert json.dumps(a["chain"], sort_keys=True) == \
+        json.dumps(b["chain"], sort_keys=True)
+
+
+def test_empty_fusion_plan_matches_no_fusion_exactly():
+    """A FusionPlan that fuses nothing must not perturb the run at all —
+    the rng streams, hop trees and timings stay byte-identical."""
+    _, plain = _chain_run("containerd", seed=4, p2=0.8, fusion=None)
+    _, empty = _chain_run("containerd", seed=4, p2=0.8,
+                          fusion=FusionPlan(edges=()))
+    assert plain["latencies_ms"] == empty["latencies_ms"]
+    assert json.dumps(plain["chain"], sort_keys=True) == \
+        json.dumps(empty["chain"], sort_keys=True)
+
+
+def test_fusion_improves_latency_and_pool_cost_on_containerd():
+    plan = FusionPlan(edges=(("ingest", "transform"),
+                             ("transform", "store")))
+    rt_u, unfused = _chain_run("containerd", seed=2)
+    rt_f, fused = _chain_run("containerd", seed=2, fusion=plan)
+    assert fused["chain"]["fused_members"] > 0
+    assert fused["chain"]["hops"] == fused["chain"]["hops"][:1]  # roots only
+    assert fused["chain"]["root_p99_ms"] < unfused["chain"]["root_p99_ms"]
+    assert fused["chain"]["root_median_ms"] < \
+        unfused["chain"]["root_median_ms"]
+    # fused hops skip the gateway + netstack stations entirely
+    assert rt_f.cores.busy_time < 0.7 * rt_u.cores.busy_time
+
+
+def test_linear_chain_latency_is_additive():
+    """In a prob-1.0 linear chain each hop starts when its parent ends,
+    so with no warmup filtering the root's e2e mean is exactly the sum
+    of the per-hop latency means."""
+    _, res = _chain_run("junctiond", seed=1, rate=150.0, warmup_frac=0.0)
+    ch = res["chain"]
+    assert ch["roots_completed"] == ch["n_roots"] > 50
+    hop_ns = [h["n"] for h in ch["hops"]]
+    assert hop_ns == [ch["n_roots"]] * 3
+    assert ch["root_mean_ms"] == pytest.approx(
+        sum(h["mean_ms"] for h in ch["hops"]), rel=1e-6)
+
+
+def test_payload_scale_raises_downstream_hop_latency():
+    _, small = _chain_run("containerd", seed=6, rate=150.0, scale2=1.0)
+    _, big = _chain_run("containerd", seed=6, rate=150.0, scale2=16.0)
+    h2_small = small["chain"]["hops"][2]["mean_ms"]
+    h2_big = big["chain"]["hops"][2]["mean_ms"]
+    assert h2_big > h2_small
+
+
+# ---------------------------------------------------------------------------
+# The chain-tax claim: per-hop platform overhead across the matrix.
+
+
+def test_per_hop_tax_ordering_junctiond_lowest():
+    """The acceptance pin: junctiond's per-hop platform tax is the
+    lowest of the whole backend matrix, and containerd pays well over
+    it (measured ~1.7-1.9x; gated conservatively at 1.3x)."""
+    tax = {}
+    for backend in ALL_BACKENDS:
+        _, res = _chain_run(backend, seed=0)
+        assert res["chain"]["rejected_hops"] == 0
+        tax[backend] = res["chain"]["hop_tax_mean_ms"]
+    others = {b: t for b, t in tax.items() if b != "junctiond"}
+    assert tax["junctiond"] < min(others.values()), tax
+    assert tax["containerd"] >= 1.3 * tax["junctiond"], tax
+
+
+# ---------------------------------------------------------------------------
+# Fleet: gateway-routed hops across workers.
+
+
+class _SpyGateway(Gateway):
+    """Records every routing decision: (fn, worker id)."""
+
+    __slots__ = ("routed",)
+
+    def __init__(self, cluster, policy, spill_load=None):
+        super().__init__(cluster, policy, spill_load)
+        self.routed = []
+
+    def route(self, fn):
+        w = super().route(fn)
+        self.routed.append((fn, None if w is None else w.wid))
+        return w
+
+
+def _fleet_chain_run(seed=0, spy=False):
+    sim = Simulator(seed=seed)
+    cl = Cluster(sim, 4, backend="containerd", n_cores=8,
+                 placement="round-robin")
+    if spy:
+        cl.gateway = _SpyGateway(cl, resolve_placement("round-robin"))
+    for name in ("ingest", "transform", "store"):
+        cl.deploy_blocking(FunctionSpec(name=name, max_cores=8))
+    return cl, drive(cl, _pipeline_load(rate=400.0))
+
+
+def test_fleet_chain_same_seed_byte_identical():
+    _, a = _fleet_chain_run(seed=3)
+    _, b = _fleet_chain_run(seed=3)
+    assert a["latencies_ms"] == b["latencies_ms"]
+    assert json.dumps(a["chain"], sort_keys=True) == \
+        json.dumps(b["chain"], sort_keys=True)
+    assert json.dumps(a["fleet"], sort_keys=True) == \
+        json.dumps(b["fleet"], sort_keys=True)
+
+
+def test_fleet_chain_hops_route_cross_worker():
+    cl, res = _fleet_chain_run(seed=0, spy=True)
+    assert res["chain"]["n_roots"] > 50
+    assert [h["hop"] for h in res["chain"]["hops"]] == [0, 1, 2]
+    # every hop re-enters the gateway as a request of its own...
+    routed_fns = {fn for fn, _ in cl.gateway.routed}
+    assert routed_fns == {"ingest", "transform", "store"}
+    # ...and round-robin spreads a root's hops across distinct workers
+    wids = {wid for fn, wid in cl.gateway.routed if fn == "transform"}
+    assert len(wids) > 1
+
+
+# ---------------------------------------------------------------------------
+# Schema v6.
+
+
+def _chain_result_stub():
+    hop = {"hop": 0, "n": 10, "median_ms": 1.0, "p99_ms": 2.0,
+           "mean_ms": 1.1, "tax_mean_ms": 0.4}
+    return {"mode": "chain", "n": 30, "median_ms": 1.0, "p99_ms": 2.0,
+            "chain": {"n_roots": 10, "roots_completed": 10,
+                      "root_median_ms": 3.0, "root_p99_ms": 5.0,
+                      "root_mean_ms": 3.2, "hop_tax_mean_ms": 0.4,
+                      "rejected_hops": 0, "fused_members": 0,
+                      "hops": [hop]}}
+
+
+def _doc_with(result):
+    return build_artifact("unit", [{
+        "name": "s", "mode": "chain", "description": "d",
+        "backend_set": ["containerd"],
+        "backends": {"containerd": result}}], [], [])
+
+
+def test_schema_v6_validates_chain_blocks():
+    validate_artifact(_doc_with(_chain_result_stub()))
+    # dropping the chain block off a chain-mode result is a violation
+    bad = _chain_result_stub()
+    del bad["chain"]
+    with pytest.raises(ValueError, match="chain"):
+        validate_artifact(_doc_with(bad))
+    # hop rows must keep the per-hop breakdown keys
+    bad = _chain_result_stub()
+    del bad["chain"]["hops"][0]["tax_mean_ms"]
+    with pytest.raises(ValueError, match="hops"):
+        validate_artifact(_doc_with(bad))
+    # a fusion block, when present, needs its comparison ratios
+    bad = _chain_result_stub()
+    bad["fusion"] = {"chain": _chain_result_stub()["chain"]}
+    with pytest.raises(ValueError, match="fusion"):
+        validate_artifact(_doc_with(bad))
+    good = _chain_result_stub()
+    good["fusion"] = {"chain": _chain_result_stub()["chain"],
+                      "p99_improvement": 1.5, "pool_efficiency": 2.0}
+    validate_artifact(_doc_with(good))

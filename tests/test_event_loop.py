@@ -215,6 +215,40 @@ def test_loadspec_validation_and_defaults():
     assert w.sum() == pytest.approx(1.0)
 
 
+def test_loadspec_rejects_bad_weights():
+    # negative weights would make rng.choice throw deep inside a run
+    with pytest.raises(ValueError, match="non-negative"):
+        LoadSpec(arrivals=PoissonArrivals(10.0), functions=("a", "b"),
+                 weights=(0.5, -0.5))
+    # an all-zero mix cannot be normalized into pick probabilities
+    with pytest.raises(ValueError, match="positive sum"):
+        LoadSpec(arrivals=PoissonArrivals(10.0), functions=("a", "b"),
+                 weights=(0.0, 0.0))
+    # zero weight for one function is fine while the sum stays positive
+    spec = LoadSpec(arrivals=PoissonArrivals(10.0), functions=("a", "b"),
+                    weights=(1.0, 0.0))
+    assert spec.normalized_weights().sum() == pytest.approx(1.0)
+
+
+def test_loadspec_rejects_empty_observation_window():
+    with pytest.raises(ValueError, match="duration_s"):
+        LoadSpec.single("aes", 100.0, duration_s=0.0)
+    # warmup_s >= duration_s leaves nothing to observe
+    with pytest.raises(ValueError, match="warmup_s"):
+        LoadSpec.single("aes", 100.0, duration_s=0.2, warmup_s=0.3)
+    with pytest.raises(ValueError, match="warmup_s"):
+        LoadSpec.single("aes", 100.0, duration_s=0.2, warmup_s=0.2)
+    with pytest.raises(ValueError, match="warmup_s"):
+        LoadSpec.single("aes", 100.0, duration_s=0.2, warmup_s=-0.1)
+    with pytest.raises(ValueError, match="warmup_frac"):
+        LoadSpec.single("aes", 100.0, duration_s=1.0, warmup_frac=1.0)
+    with pytest.raises(ValueError, match="warmup_frac"):
+        LoadSpec.single("aes", 100.0, duration_s=1.0, warmup_frac=-0.2)
+    # boundary: warmup_s just inside the window is accepted
+    ok = LoadSpec.single("aes", 100.0, duration_s=0.2, warmup_s=0.19)
+    assert ok.effective_warmup_s == pytest.approx(0.19)
+
+
 def test_heavy_tailed_work_batch_sampler():
     rng = np.random.default_rng(0)
     sampler = heavy_tailed_work(rng, median_us=95.0, cap_mult=10.0)

@@ -8,9 +8,9 @@ import numpy as np
 import pytest
 
 from repro.core import (BurstyArrivals, DiurnalArrivals, FaasdRuntime,
-                        FunctionSpec, PoissonArrivals, Simulator,
-                        TraceReplay, heavy_tailed_work, knee_of_curve,
-                        run_mixed_open_loop)
+                        FunctionSpec, LoadSpec, PoissonArrivals, Simulator,
+                        TraceReplay, drive, heavy_tailed_work,
+                        knee_of_curve)
 from repro.experiments import (SMOKE_DURATION_SCALE, ExperimentRunner,
                                build_artifact, build_scenarios,
                                get_scenario, get_suite, latency_histogram,
@@ -82,14 +82,14 @@ def test_heavy_tailed_work_median_and_determinism():
 # Mixed open-loop driver.
 
 
-def test_run_mixed_open_loop_deterministic_and_per_fn():
+def test_mixed_open_loop_deterministic_and_per_fn():
     def once():
         sim = Simulator(seed=11)
         rt = FaasdRuntime(sim, backend="junctiond")
         rt.deploy_blocking(FunctionSpec(name="a"))
         rt.deploy_blocking(FunctionSpec(name="b"))
-        return run_mixed_open_loop(rt, ["a", "b"], [0.8, 0.2],
-                                   PoissonArrivals(1200.0), duration_s=0.4)
+        return drive(rt, LoadSpec(PoissonArrivals(1200.0), ("a", "b"),
+                                  weights=(0.8, 0.2), duration_s=0.4))
 
     r1, r2 = once(), once()
     assert r1["median_ms"] == r2["median_ms"]

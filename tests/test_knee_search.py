@@ -7,9 +7,9 @@ import math
 
 import pytest
 
-from repro.core import (FaasdRuntime, FunctionSpec, KneeSearch,
-                        PoissonArrivals, Simulator, knee_index_of_curve,
-                        knee_of_curve, run_mixed_open_loop, run_open_loop)
+from repro.core import (FaasdRuntime, FunctionSpec, KneeSearch, LoadSpec,
+                        PoissonArrivals, Simulator, drive,
+                        knee_index_of_curve, knee_of_curve)
 from repro.experiments import (ExperimentRunner, Scenario, SearchSpec,
                                build_artifact, get_scenario, metric_row,
                                validate_artifact)
@@ -143,9 +143,9 @@ def _sim_probe(backend, duration_s=0.4, seed=3):
         sim = Simulator(seed=seed)
         rt = FaasdRuntime(sim, backend=backend, n_cores=10)
         rt.deploy_blocking(FunctionSpec(name="aes", max_cores=8))
-        return run_mixed_open_loop(rt, ["aes"], [1.0],
-                                   PoissonArrivals(rate), duration_s=d,
-                                   warmup_frac=0.2)
+        return drive(rt, LoadSpec(PoissonArrivals(rate), ("aes",),
+                                  weights=(1.0,), duration_s=d,
+                                  warmup_frac=0.2))
     return probe
 
 
@@ -174,7 +174,7 @@ def test_knee_search_matches_dense_grid_knee(backend, lo, hi):
     assert res.n_probes < len(rates)
 
 
-def test_run_open_loop_probe_is_deterministic_for_search():
+def test_open_loop_probe_is_deterministic_for_search():
     """Fixed (seed, rate) -> identical probe row, which makes the whole
     search deterministic for a given scenario + seed."""
     probe = _sim_probe("containerd")
@@ -185,8 +185,8 @@ def test_run_open_loop_probe_is_deterministic_for_search():
 
 
 # ---------------------------------------------------------------------------
-# Satellite bugfix: run_open_loop must report the per-run rejected delta,
-# not the runtime-lifetime counter.
+# Satellite bugfix: an open-loop run must report the per-run rejected
+# delta, not the runtime-lifetime counter.
 
 
 def test_completed_frac_counts_admitted_arrivals_not_records():
@@ -201,21 +201,23 @@ def test_completed_frac_counts_admitted_arrivals_not_records():
     sim = Simulator(seed=3)
     rt = FaasdRuntime(sim, backend="containerd", n_cores=10)
     rt.deploy_blocking(FunctionSpec(name="aes", max_cores=8))
-    over = run_mixed_open_loop(rt, ["aes"], [1.0], PoissonArrivals(20000.0),
-                               duration_s=0.4, warmup_frac=0.2)
+    over = drive(rt, LoadSpec(PoissonArrivals(20000.0), ("aes",),
+                              weights=(1.0,), duration_s=0.4,
+                              warmup_frac=0.2))
     assert over["completed_frac"] < 0.9
 
 
-def test_run_open_loop_reports_per_run_rejected_delta():
+def test_drive_reports_per_run_rejected_delta():
     sim = Simulator(seed=0)
     rt = FaasdRuntime(sim, backend="containerd", n_cores=4)
     rt.deploy_blocking(FunctionSpec(name="f"))
-    first = run_open_loop(rt, "f", rate_rps=2000.0, duration_s=0.2,
-                          max_outstanding=1)
+    first = drive(rt, LoadSpec.single("f", 2000.0, duration_s=0.2,
+                                      warmup_s=0.05, max_outstanding=1))
     assert first["rejected"] > 0                # overload run saw rejects
     # same runtime reused at a trivial rate (exactly what knee-search
     # bracketing wants to do): the new run must report ITS OWN rejects
-    second = run_open_loop(rt, "f", rate_rps=50.0, duration_s=0.2)
+    second = drive(rt, LoadSpec.single("f", 50.0, duration_s=0.2,
+                                       warmup_s=0.05))
     assert second["rejected"] == 0
     assert rt.rejected == first["rejected"]     # lifetime counter intact
 
