@@ -9,8 +9,6 @@ how much of a model endpoint's latency budget the FaaS runtime costs
 """
 from __future__ import annotations
 
-import dataclasses
-import glob
 import json
 import os
 

@@ -39,8 +39,8 @@ import sys
 import time
 
 from repro.core.backends import available_backends, get_backend_class
-from repro.experiments import (ExperimentRunner, SMOKE_DURATION_SCALE,
-                               SUITES, build_artifact, build_scenarios,
+from repro.experiments import (SMOKE_DURATION_SCALE, SUITES,
+                               ExperimentRunner, build_artifact, build_scenarios,
                                get_suite, metric_row, metrics_csv,
                                write_artifact)
 
@@ -66,6 +66,7 @@ def run_legacy(args) -> int:
     all_rows, failures = [], []
     for name, mod in _legacy_benches():
         print(f"\n===== {name} =====")
+        # simlint: allow[wall-clock] prints host elapsed per legacy bench
         t0 = time.time()
         try:
             rows, _ = mod.run(verbose=True)
@@ -75,6 +76,7 @@ def run_legacy(args) -> int:
             all_rows.append((f"{name}_FAILED", float("nan"), repr(e)))
             failures.append({"scenario": name, "backend": "-",
                              "error": repr(e)})
+        # simlint: allow[wall-clock] prints host elapsed per legacy bench
         print(f"  [{time.time() - t0:.1f}s]")
     print("\nname,value,derived")
     for name, value, derived in all_rows:
@@ -124,8 +126,10 @@ def measure_sim_throughput(duration_s: float = 8.0, rate_rps: float = 1200.0,
             rt = FaasdRuntime(sim, backend=backend)
             rt.deploy_blocking(FunctionSpec(name="aes"))
             load = LoadSpec.single("aes", rate_rps, duration_s=duration_s)
+            # simlint: allow[wall-clock] benchmarks the simulator itself
             t0 = time.perf_counter()
             res = drive(rt, load, engine=engine)
+            # simlint: allow[wall-clock] benchmarks the simulator itself
             wall = min(wall, max(time.perf_counter() - t0, 1e-9))
             n = res["n"]
         out[engine] = {"n": n, "wall_s": wall, "sim_rps": n / wall}
@@ -157,8 +161,10 @@ def measure_fleet_sim_throughput(duration_s: float = 4.0,
         cl = Cluster(sim, n_workers, backend=backend)
         cl.deploy_blocking(FunctionSpec(name="aes"))
         load = LoadSpec.single("aes", rate_rps, duration_s=duration_s)
+        # simlint: allow[wall-clock] benchmarks the simulator itself
         t0 = time.perf_counter()
         res = drive(cl, load)
+        # simlint: allow[wall-clock] benchmarks the simulator itself
         wall = min(wall, max(time.perf_counter() - t0, 1e-9))
         n = res["n"]
     return {"n": n, "wall_s": wall, "sim_rps": n / wall,
@@ -405,6 +411,7 @@ def main(argv=None) -> int:
     if args.profile:
         return run_profile(args)
     if args.suite == "legacy":
+        # simlint: allow[float-eq] argparse default sentinel, no arithmetic
         if args.duration != 1.0 or args.workers or args.backends \
                 or args.search_budget is not None:
             print("note: --duration/--workers/--backends/--search-budget "

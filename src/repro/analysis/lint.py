@@ -1,0 +1,77 @@
+"""simlint CLI: ``python -m repro.analysis.lint src tests benchmarks``.
+
+Exit codes: 0 = clean, 1 = findings, 2 = usage error.  Findings print
+one per line as ``path:line: [rule-id] message``.  ``--list`` prints
+the rule registry with each rule's one-line doc; ``--rules a,b``
+restricts the run to a subset.
+
+Suppress a finding with ``# simlint: allow[rule-id] reason`` on (or
+directly above) the offending line — the reason is mandatory (see
+``repro.analysis.lint_pragmas``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Determinism & contract lint for the repro "
+                    "simulator (stdlib ast, no deps).")
+    parser.add_argument("paths", nargs="*",
+                        help="files or directories to lint "
+                             "(e.g. src tests benchmarks)")
+    parser.add_argument("--list", action="store_true", dest="list_rules",
+                        help="list registered rules and exit")
+    parser.add_argument("--verbose", action="store_true",
+                        help="with --list, print each rule's full doc")
+    parser.add_argument("--rules", default=None, metavar="ID[,ID...]",
+                        help="run only this comma-separated rule subset")
+    parser.add_argument("--root", default=".",
+                        help="repo root paths are resolved against "
+                             "(default: cwd)")
+    args = parser.parse_args(argv)
+
+    from repro.analysis.lint_rules import RULES
+
+    if args.list_rules:
+        width = max(len(r) for r in RULES)
+        for rid in sorted(RULES):
+            rule = RULES[rid]
+            print(f"{rid:<{width}}  {rule.summary}")
+            if args.verbose:
+                for line in rule.doc.splitlines()[1:]:
+                    print(f"{'':<{width}}  {line.strip()}")
+                print()
+        return 0
+
+    if not args.paths:
+        parser.print_usage(sys.stderr)
+        print("error: no paths given (try: src tests benchmarks)",
+              file=sys.stderr)
+        return 2
+
+    rule_ids = None
+    if args.rules is not None:
+        rule_ids = [r.strip() for r in args.rules.split(",") if r.strip()]
+
+    from repro.analysis.lint_engine import run_lint
+    try:
+        findings = run_lint(args.paths, root=args.root, rule_ids=rule_ids)
+    except KeyError as exc:
+        print(f"error: {exc.args[0]}", file=sys.stderr)
+        return 2
+
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"simlint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

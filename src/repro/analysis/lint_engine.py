@@ -1,0 +1,179 @@
+"""simlint core: file loading, the two-pass rule driver, suppression.
+
+The engine is deliberately small: it parses every ``.py`` file once with
+the stdlib ``ast`` module, hands each :class:`SourceFile` to every
+applicable rule's per-file ``check`` pass, then runs each rule's
+cross-file ``finalize`` pass over the whole :class:`Project` (this is
+how the registry-reachability rule sees both the ``@register_backend``
+sites and the ``_BUILTIN_MODULES`` list they must appear in).
+
+Findings are deterministic: files are visited in sorted path order and
+the final report is sorted by ``(path, line, rule)`` — the linter obeys
+the same no-unordered-iteration contract it enforces.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+from repro.analysis.lint_pragmas import parse_pragmas
+
+#: rule id used for parse errors and malformed pragmas; not suppressible.
+META_RULE = "pragma"
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str           # root-relative posix path
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class SourceFile:
+    """One parsed file plus its pragma table."""
+    path: str                       # root-relative posix path
+    tree: ast.Module
+    lines: List[str]
+    module: Optional[str]           # dotted module name, when derivable
+    suppress: Dict[int, Set[str]] = field(default_factory=dict)
+
+    def is_suppressed(self, line: int, rule: str) -> bool:
+        return rule in self.suppress.get(line, ())
+
+
+@dataclass
+class Project:
+    """All files in one lint run, for cross-file ``finalize`` passes."""
+    files: List[SourceFile]
+
+    def by_module(self) -> Dict[str, SourceFile]:
+        return {f.module: f for f in self.files if f.module}
+
+
+def module_name_of(relpath: str) -> Optional[str]:
+    """Dotted module name for a root-relative path, or ``None``.
+
+    ``src/repro/core/workload.py`` -> ``repro.core.workload``;
+    ``tests/test_event_loop.py`` -> ``tests.test_event_loop``.
+    """
+    if not relpath.endswith(".py"):
+        return None
+    parts = relpath[:-3].split("/")
+    if parts[0] == "src":
+        parts = parts[1:]
+    if not parts:
+        return None
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    if not parts or not all(p.isidentifier() for p in parts):
+        return None
+    return ".".join(parts)
+
+
+def iter_python_files(paths: Sequence[str], root: Path) -> List[Path]:
+    """Expand files/directories into a sorted, de-duplicated file list."""
+    seen: Set[Path] = set()
+    out: List[Path] = []
+    for p in paths:
+        target = Path(p)
+        if not target.is_absolute():
+            target = root / target
+        if target.is_dir():
+            candidates = sorted(
+                q for q in target.rglob("*.py")
+                if "__pycache__" not in q.parts
+                and not any(part.startswith(".") for part in q.parts))
+        else:
+            candidates = [target]
+        for q in candidates:
+            q = q.resolve()
+            if q not in seen:
+                seen.add(q)
+                out.append(q)
+    return out
+
+
+def load_source_file(
+    abspath: Path,
+    root: Path,
+    known_rules: Set[str],
+) -> tuple[Optional[SourceFile], List[Finding]]:
+    """Parse one file.  Returns ``(file_or_None, findings)`` — syntax
+    errors and malformed pragmas surface as findings, not exceptions."""
+    try:
+        relpath = abspath.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        relpath = abspath.as_posix()
+    try:
+        text = abspath.read_text(encoding="utf-8")
+    except OSError as exc:
+        return None, [Finding(relpath, 1, META_RULE,
+                              f"cannot read file: {exc}")]
+    try:
+        tree = ast.parse(text, filename=str(abspath))
+    except SyntaxError as exc:
+        return None, [Finding(relpath, exc.lineno or 1, META_RULE,
+                              f"syntax error: {exc.msg}")]
+    lines = text.splitlines()
+    suppress, problems = parse_pragmas(lines, known_rules)
+    findings = [Finding(relpath, p.line, META_RULE, p.message)
+                for p in problems]
+    sf = SourceFile(path=relpath, tree=tree, lines=lines,
+                    module=module_name_of(relpath), suppress=suppress)
+    return sf, findings
+
+
+def run_lint(
+    paths: Sequence[str],
+    root: str = ".",
+    rule_ids: Optional[Iterable[str]] = None,
+) -> List[Finding]:
+    """Lint ``paths`` (files or directories, relative to ``root``) with
+    the selected rules (default: all registered).  Returns the sorted,
+    suppression-filtered findings."""
+    # imported here so `import repro.analysis.lint_engine` stays cheap
+    # and rule registration happens exactly once, on first use
+    from repro.analysis.lint_rules import RULES
+
+    if rule_ids is None:
+        rules = list(RULES.values())
+    else:
+        unknown = sorted(set(rule_ids) - set(RULES))
+        if unknown:
+            raise KeyError(f"unknown rule id(s): {', '.join(unknown)}")
+        rules = [RULES[r] for r in rule_ids]
+
+    rootp = Path(root)
+    known = set(RULES)
+    files: List[SourceFile] = []
+    findings: List[Finding] = []
+    for abspath in iter_python_files(paths, rootp):
+        sf, extra = load_source_file(abspath, rootp, known)
+        findings.extend(extra)
+        if sf is not None:
+            files.append(sf)
+
+    project = Project(files)
+    for rule in rules:
+        for sf in files:
+            if rule.applies(sf.path):
+                findings.extend(rule.check(sf))
+        findings.extend(rule.finalize(project))
+
+    by_path = {f.path: f for f in files}
+    kept = []
+    for f in findings:
+        if f.rule != META_RULE:
+            sf = by_path.get(f.path)
+            if sf is not None and sf.is_suppressed(f.line, f.rule):
+                continue
+        kept.append(f)
+    kept.sort(key=lambda f: (f.path, f.line, f.rule, f.message))
+    return kept

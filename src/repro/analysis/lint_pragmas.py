@@ -1,0 +1,101 @@
+"""Suppression pragmas for simlint.
+
+A finding is suppressed by an inline comment on the offending line::
+
+    t0 = time.time()   # simlint: allow[wall-clock] measures host elapsed
+
+or by a comment-only line immediately above it::
+
+    # simlint: allow[wall-clock] measures host elapsed
+    t0 = time.time()
+
+The reason after the closing bracket is mandatory: a pragma without one
+is itself reported as a finding (rule id ``pragma``), so every
+suppression in the tree documents *why* the contract does not apply.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Set, Tuple
+
+# A pragma reads `simlint: allow[rule-id] reason` after a `#` — verb
+# and rule id are captured so that unknown verbs ("ignore", "disable")
+# fail loudly instead of silently not suppressing anything.  The
+# lookbehind skips a `#` immediately preceded by a quote or backtick,
+# so pragma examples inside string literals and docstrings (including
+# this module's own) are not parsed as pragmas.
+_PRAGMA_RE = re.compile(
+    r"(?<![\"'`])#\s*simlint:\s*(?P<verb>[A-Za-z_-]+)\s*"
+    r"\[(?P<rule>[A-Za-z0-9_-]*)\]\s*(?P<reason>.*)$")
+
+# Anything that merely *mentions* simlint right after a `#`, used to
+# catch malformed pragmas that the strict regex above would skip.
+_LOOSE_RE = re.compile(r"(?<![\"'`])#\s*simlint:")
+
+MIN_REASON_LEN = 3
+
+
+@dataclass(frozen=True)
+class PragmaProblem:
+    """A malformed pragma (wrong verb, no rule id, missing reason)."""
+    line: int
+    message: str
+
+
+def parse_pragmas(
+    lines: List[str],
+    known_rules: Set[str],
+) -> Tuple[Dict[int, Set[str]], List[PragmaProblem]]:
+    """Scan source ``lines`` for suppression pragmas.
+
+    Returns ``(suppressions, problems)`` where ``suppressions`` maps a
+    1-based line number to the set of rule ids suppressed on that line.
+    A pragma on a comment-only line anchors to the next line; a trailing
+    pragma anchors to its own line.
+    """
+    suppress: Dict[int, Set[str]] = {}
+    problems: List[PragmaProblem] = []
+    for lineno, raw in enumerate(lines, start=1):
+        if "simlint" not in raw:
+            continue
+        m = _PRAGMA_RE.search(raw)
+        if m is None:
+            if _LOOSE_RE.search(raw):
+                problems.append(PragmaProblem(
+                    lineno,
+                    "malformed simlint pragma; expected "
+                    "'# simlint: allow[rule-id] reason'"))
+            continue
+        verb = m.group("verb")
+        rule = m.group("rule")
+        reason = m.group("reason").strip()
+        if verb != "allow":
+            problems.append(PragmaProblem(
+                lineno, f"unknown simlint pragma verb {verb!r}; "
+                        f"only 'allow' is supported"))
+            continue
+        if not rule:
+            problems.append(PragmaProblem(
+                lineno, "simlint pragma is missing a rule id: "
+                        "'# simlint: allow[rule-id] reason'"))
+            continue
+        if known_rules and rule not in known_rules:
+            problems.append(PragmaProblem(
+                lineno, f"simlint pragma names unknown rule {rule!r}"))
+            continue
+        if len(reason) < MIN_REASON_LEN:
+            problems.append(PragmaProblem(
+                lineno, f"simlint pragma for [{rule}] requires a reason "
+                        f"after the bracket"))
+            continue
+        # comment-only lines anchor the suppression to the next line
+        anchor = lineno
+        if raw.lstrip().startswith("#"):
+            anchor = lineno + 1
+        suppress.setdefault(anchor, set()).add(rule)
+        # a trailing pragma also covers its own line even when the
+        # statement spans several physical lines ending here
+        if anchor != lineno:
+            suppress.setdefault(lineno, set()).add(rule)
+    return suppress, problems

@@ -1,0 +1,683 @@
+"""simlint rules: the repo's determinism & API contracts, as AST checks.
+
+Each rule mirrors the backend registry pattern: subclass :class:`Rule`,
+decorate with :func:`register_rule`, and it appears in ``--list`` and in
+the default rule set.  A rule's class docstring *is* its documentation —
+the first line is the one-liner shown by ``--list``, the rest is shown
+by ``--list --verbose``.
+
+Rules run in two passes (see ``lint_engine``): ``check(file)`` yields
+per-file findings; ``finalize(project)`` yields cross-file findings
+after every file has been visited (used by the registry-reachability
+and spec-kwargs rules, which need to pair definition sites in one file
+with use sites in another).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple, Type
+
+from repro.analysis.lint_engine import Finding, Project, SourceFile
+
+RULES: Dict[str, "Rule"] = {}
+
+#: deterministic-simulation modules: the event core and the fleet layer.
+SIM_PATHS = ("src/repro/core/", "src/repro/fleet/")
+
+
+def register_rule(cls: Type["Rule"]) -> Type["Rule"]:
+    """Class decorator adding a rule to the global registry (the same
+    shape as ``@register_backend`` in ``repro.core.backends``)."""
+    rule = cls()
+    if not rule.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if rule.id in RULES:
+        raise ValueError(f"duplicate rule id {rule.id!r}")
+    RULES[rule.id] = rule
+    return cls
+
+
+class Rule:
+    #: stable identifier used in output and in ``allow[...]`` pragmas.
+    id: str = ""
+    #: root-relative path prefixes the per-file pass applies to
+    #: (empty tuple = every file in the run).
+    paths: Tuple[str, ...] = ()
+    #: exact root-relative paths exempt from the per-file pass.
+    exempt: Tuple[str, ...] = ()
+
+    def applies(self, path: str) -> bool:
+        if path in self.exempt:
+            return False
+        if not self.paths:
+            return True
+        return any(path.startswith(p) for p in self.paths)
+
+    def check(self, f: SourceFile) -> Iterator[Finding]:
+        return iter(())
+
+    def finalize(self, project: Project) -> Iterator[Finding]:
+        return iter(())
+
+    @property
+    def doc(self) -> str:
+        return (self.__doc__ or "").strip()
+
+    @property
+    def summary(self) -> str:
+        return self.doc.splitlines()[0] if self.doc else ""
+
+
+def _terminal_name(node: ast.AST) -> Optional[str]:
+    """The rightmost identifier of a Name / dotted Attribute chain."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _value_terminal(node: ast.AST) -> Optional[str]:
+    """For ``a.b.c`` return ``b``'s terminal — i.e. the object a method
+    is called on (``LoadSpec.single`` -> ``LoadSpec``)."""
+    if isinstance(node, ast.Attribute):
+        return _terminal_name(node.value)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# rule 1: wall-clock / randomness sources
+
+
+@register_rule
+class WallClockRule(Rule):
+    """No wall-clock or ambient randomness in simulation code.
+
+    ``time.time()``/``monotonic()``/``perf_counter()``,
+    ``datetime.now()``/``utcnow()``/``today()``, and any use of the
+    stdlib ``random`` or ``uuid`` modules make runs depend on the host
+    instead of the seed.  Sim state must come from the simulator clock
+    (``sim.now``) and the run's seeded ``numpy`` Generator.  Harness
+    code in ``experiments/``/``launch/``/``benchmarks/`` that measures
+    *host* elapsed time may suppress with
+    ``# simlint: allow[wall-clock] <why>``.
+    """
+
+    id = "wall-clock"
+    # sim code plus the pragma-gated harness layers; the JAX serving /
+    # training stack (src/repro/serving, src/repro/train) measures real
+    # host step time by design and is out of scope
+    paths = SIM_PATHS + ("src/repro/experiments/", "src/repro/launch/",
+                         "src/repro/analysis/", "benchmarks/")
+
+    _WALL_FNS = frozenset({
+        "time", "time_ns", "monotonic", "monotonic_ns",
+        "perf_counter", "perf_counter_ns", "process_time",
+        "process_time_ns"})
+    _DT_FNS = frozenset({"now", "utcnow", "today"})
+
+    def check(self, f: SourceFile) -> Iterator[Finding]:
+        time_aliases: Set[str] = set()
+        dt_mod_aliases: Set[str] = set()    # `import datetime [as d]`
+        dt_cls_aliases: Set[str] = set()    # `from datetime import datetime`
+        wall_fn_aliases: Set[str] = set()   # `from time import time [as t]`
+
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    top = alias.name.split(".")[0]
+                    local = alias.asname or top
+                    if top in ("random", "uuid"):
+                        yield Finding(
+                            f.path, node.lineno, self.id,
+                            f"import of nondeterministic module "
+                            f"{top!r}; draw from the run's seeded "
+                            f"numpy Generator instead")
+                    elif top == "time":
+                        time_aliases.add(local)
+                    elif top == "datetime":
+                        dt_mod_aliases.add(local)
+            elif isinstance(node, ast.ImportFrom):
+                mod = (node.module or "").split(".")[0]
+                if mod in ("random", "uuid"):
+                    yield Finding(
+                        f.path, node.lineno, self.id,
+                        f"import from nondeterministic module {mod!r}; "
+                        f"draw from the run's seeded numpy Generator "
+                        f"instead")
+                elif mod == "time":
+                    for alias in node.names:
+                        if alias.name in self._WALL_FNS:
+                            wall_fn_aliases.add(alias.asname or alias.name)
+                elif mod == "datetime":
+                    for alias in node.names:
+                        if alias.name in ("datetime", "date"):
+                            dt_cls_aliases.add(alias.asname or alias.name)
+
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id in wall_fn_aliases:
+                yield Finding(
+                    f.path, node.lineno, self.id,
+                    f"wall-clock read {fn.id}(); use sim.now for sim "
+                    f"time")
+            elif isinstance(fn, ast.Attribute):
+                base = fn.value
+                if (isinstance(base, ast.Name) and base.id in time_aliases
+                        and fn.attr in self._WALL_FNS):
+                    yield Finding(
+                        f.path, node.lineno, self.id,
+                        f"wall-clock read {base.id}.{fn.attr}(); use "
+                        f"sim.now for sim time")
+                elif fn.attr in self._DT_FNS:
+                    if (isinstance(base, ast.Name)
+                            and base.id in dt_cls_aliases):
+                        yield Finding(
+                            f.path, node.lineno, self.id,
+                            f"wall-clock read {base.id}.{fn.attr}(); "
+                            f"use sim.now for sim time")
+                    elif (isinstance(base, ast.Attribute)
+                          and base.attr in ("datetime", "date")
+                          and isinstance(base.value, ast.Name)
+                          and base.value.id in dt_mod_aliases):
+                        yield Finding(
+                            f.path, node.lineno, self.id,
+                            f"wall-clock read "
+                            f"{base.value.id}.{base.attr}.{fn.attr}(); "
+                            f"use sim.now for sim time")
+
+
+# ---------------------------------------------------------------------------
+# rule 2: unordered iteration / address-keyed ordering
+
+
+@register_rule
+class UnorderedIterationRule(Rule):
+    """No bare set iteration or ``hash()``/``id()``-keyed ordering in
+    sim code.
+
+    Iteration order over a ``set`` (and ordering by builtin ``hash()``
+    or ``id()``) varies with PYTHONHASHSEED and allocation order; when
+    it feeds event scheduling, same-seed runs diverge.  Wrap the
+    iterable in ``sorted(...)`` or key on ``zlib.crc32`` instead.
+    """
+
+    id = "unordered-iter"
+    paths = SIM_PATHS
+
+    _SET_CALLS = frozenset({"set", "frozenset"})
+    _SET_METHODS = frozenset({
+        "intersection", "union", "difference", "symmetric_difference"})
+
+    def _is_unordered(self, node: ast.AST) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            fn = node.func
+            if isinstance(fn, ast.Name) and fn.id in self._SET_CALLS:
+                return True
+            if (isinstance(fn, ast.Attribute)
+                    and fn.attr in self._SET_METHODS):
+                return True
+        return False
+
+    def check(self, f: SourceFile) -> Iterator[Finding]:
+        for node in ast.walk(f.tree):
+            iters: List[ast.AST] = []
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                iters.append(node.iter)
+            elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                   ast.GeneratorExp, ast.DictComp)):
+                iters.extend(g.iter for g in node.generators)
+            for it in iters:
+                if self._is_unordered(it):
+                    yield Finding(
+                        f.path, it.lineno, self.id,
+                        "iteration over an unordered set in sim code; "
+                        "wrap in sorted(...)")
+            if isinstance(node, ast.Call):
+                fn = node.func
+                if isinstance(fn, ast.Name) and fn.id in ("hash", "id"):
+                    yield Finding(
+                        f.path, node.lineno, self.id,
+                        f"builtin {fn.id}() is not stable across runs; "
+                        f"use zlib.crc32 for deterministic hashing")
+                for kw in node.keywords:
+                    if (kw.arg == "key" and isinstance(kw.value, ast.Name)
+                            and kw.value.id in ("hash", "id")):
+                        yield Finding(
+                            f.path, node.lineno, self.id,
+                            f"ordering keyed on builtin {kw.value.id} "
+                            f"is not stable across runs")
+
+
+# ---------------------------------------------------------------------------
+# rule 3: registry reachability (cross-file)
+
+
+@register_rule
+class RegistryReachableRule(Rule):
+    """Every registered backend/placement/distribution module must be
+    imported somewhere the registry can see.
+
+    ``@register_backend`` (and the fleet ``@register_placement`` /
+    ``@register_distribution``) decorators only run on import: a module
+    that registers a class but is missing from ``_BUILTIN_MODULES`` (or,
+    for fleet registries, from the ``fleet/__init__`` imports) is
+    silently absent from ``available_backends()`` et al.
+    """
+
+    id = "registry-reachable"
+
+    _DECOS = {
+        "register_backend": "backend",
+        "register_placement": "placement",
+        "register_distribution": "distribution",
+    }
+
+    def finalize(self, project: Project) -> Iterator[Finding]:
+        registered: List[Tuple[str, str, SourceFile, int]] = []
+        builtin_lists: List[Set[str]] = []
+        fleet_init_imports: Set[str] = set()
+        saw_fleet_init = False
+
+        for f in project.files:
+            for node in ast.walk(f.tree):
+                if isinstance(node, ast.ClassDef):
+                    for deco in node.decorator_list:
+                        target = deco.func if isinstance(deco, ast.Call) \
+                            else deco
+                        name = _terminal_name(target)
+                        # registrations in tests/benchmarks are
+                        # deliberately transient fixtures; only shipped
+                        # modules must be import-reachable
+                        if (name in self._DECOS and f.module
+                                and f.path.startswith("src/")):
+                            registered.append((self._DECOS[name], f.module,
+                                               f, node.lineno))
+                elif isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        if (isinstance(t, ast.Name)
+                                and t.id.endswith("_BUILTIN_MODULES")
+                                and isinstance(node.value,
+                                               (ast.Tuple, ast.List))):
+                            mods = {e.value for e in node.value.elts
+                                    if isinstance(e, ast.Constant)
+                                    and isinstance(e.value, str)}
+                            builtin_lists.append(mods)
+            if f.path.endswith("/__init__.py") and f.module \
+                    and f.module.endswith(".fleet"):
+                saw_fleet_init = True
+                for node in ast.walk(f.tree):
+                    if isinstance(node, ast.ImportFrom) and node.module:
+                        fleet_init_imports.add(node.module)
+                        for alias in node.names:
+                            fleet_init_imports.add(
+                                f"{node.module}.{alias.name}")
+                    elif isinstance(node, ast.Import):
+                        for alias in node.names:
+                            fleet_init_imports.add(alias.name)
+
+        listed: Set[str] = set().union(*builtin_lists) if builtin_lists \
+            else set()
+        for kind, module, f, lineno in sorted(
+                registered, key=lambda r: (r[2].path, r[3])):
+            if kind == "backend":
+                # only judged when a _BUILTIN_MODULES list is in the run
+                if not builtin_lists or module in listed:
+                    continue
+                yield Finding(
+                    f.path, lineno, self.id,
+                    f"module {module!r} registers a backend but is not "
+                    f"in _BUILTIN_MODULES, so resolve_backend() will "
+                    f"never see it")
+            else:
+                if not saw_fleet_init:
+                    continue
+                if module in listed or module in fleet_init_imports:
+                    continue
+                yield Finding(
+                    f.path, lineno, self.id,
+                    f"module {module!r} registers a {kind} but is not "
+                    f"imported from the fleet package __init__, so the "
+                    f"registry will never see it")
+
+
+# ---------------------------------------------------------------------------
+# rule 4: float equality on rates / times
+
+
+@register_rule
+class FloatEqualityRule(Rule):
+    """No ``==``/``!=`` between float-typed sim quantities (rates,
+    times, latencies).
+
+    Rates and times are accumulated floats; exact comparison silently
+    never matches after any arithmetic (the PR-5 knee-row bug class).
+    Compare with a tolerance, or match on the integer/index that
+    produced the float.
+    """
+
+    id = "float-eq"
+    paths = SIM_PATHS + ("src/repro/experiments/", "benchmarks/")
+
+    _NAME_SUFFIXES = (
+        "_s", "_t", "_us", "_ms", "_ns", "_rps", "_rate", "_time",
+        "_frac", "_tol", "_lat", "_latency", "_gbps", "_mbps")
+    _NAMES = frozenset({
+        "t", "t0", "t1", "now", "rate", "rps", "knee", "dt", "lat",
+        "latency", "elapsed", "dur", "duration"})
+
+    def _timeish(self, node: ast.AST) -> bool:
+        name = None
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            name = _terminal_name(node)
+        elif (isinstance(node, ast.Subscript)
+              and isinstance(node.slice, ast.Constant)
+              and isinstance(node.slice.value, str)):
+            name = node.slice.value
+        if name is None:
+            return False
+        return (name in self._NAMES
+                or name.endswith(self._NAME_SUFFIXES))
+
+    def _floaty(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant) and isinstance(node.value, float):
+            return True
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "float"):
+            return True
+        return False
+
+    def check(self, f: SourceFile) -> Iterator[Finding]:
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            left = node.left
+            for op, right in zip(node.ops, node.comparators):
+                if isinstance(op, (ast.Eq, ast.NotEq)):
+                    lh = self._timeish(left) or self._floaty(left)
+                    rh = self._timeish(right) or self._floaty(right)
+                    if lh and rh:
+                        yield Finding(
+                            f.path, node.lineno, self.id,
+                            "exact float equality on a rate/time "
+                            "quantity; compare with a tolerance or "
+                            "match on the producing index")
+                left = right
+
+
+# ---------------------------------------------------------------------------
+# rule 5: deprecated shim call sites
+
+
+SHIM_NAMES = frozenset({"run_open_loop", "run_mixed_open_loop"})
+
+#: files allowed to reference the shims: the definitions, the package
+#: re-export, and the deprecation test that pins their behaviour.
+SHIM_EXEMPT = (
+    "src/repro/core/workload.py",
+    "src/repro/core/__init__.py",
+    "tests/test_event_loop.py",
+)
+
+
+def iter_shim_references(tree: ast.Module) -> Iterator[Tuple[int, str]]:
+    """Yield ``(lineno, name)`` for every call of / import of a
+    deprecated shim in ``tree`` (shared with the pin test in
+    ``tests/test_event_loop.py``)."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = _terminal_name(node.func)
+            if name in SHIM_NAMES:
+                yield node.lineno, name
+        elif isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name in SHIM_NAMES:
+                    yield node.lineno, alias.name
+
+
+def count_shim_call_sites(paths, root=".") -> int:
+    """Count deprecated-shim *call* sites (not imports) across a tree,
+    including the exempt files.  Used by the deprecation test to pin the
+    total to an exact number."""
+    from repro.analysis.lint_engine import iter_python_files, \
+        load_source_file
+    from pathlib import Path
+    n = 0
+    for abspath in iter_python_files(paths, Path(root)):
+        sf, _ = load_source_file(abspath, Path(root), set(RULES))
+        if sf is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call) \
+                    and _terminal_name(node.func) in SHIM_NAMES:
+                n += 1
+    return n
+
+
+@register_rule
+class DeprecatedShimRule(Rule):
+    """No new call sites of the deprecated ``run_open_loop`` /
+    ``run_mixed_open_loop`` shims.
+
+    Both delegate to ``drive(runtime, LoadSpec, ...)`` and warn; new
+    code must call ``drive`` directly.  Only the shim definitions, the
+    ``repro.core`` re-export, and the deprecation test may reference
+    them.
+    """
+
+    id = "deprecated-shim"
+    exempt = SHIM_EXEMPT
+
+    def check(self, f: SourceFile) -> Iterator[Finding]:
+        for lineno, name in iter_shim_references(f.tree):
+            yield Finding(
+                f.path, lineno, self.id,
+                f"deprecated shim {name}(); call drive(runtime, "
+                f"LoadSpec, ...) instead")
+
+
+# ---------------------------------------------------------------------------
+# rule 6: frozen-dataclass mutation outside __post_init__
+
+
+@register_rule
+class FrozenMutationRule(Rule):
+    """``object.__setattr__`` only inside ``__post_init__``.
+
+    Frozen dataclasses (LoadSpec, Scenario, the spec family) may only
+    normalise their own fields during construction; mutating one
+    anywhere else silently bypasses both the freeze and validation.
+    Build a new instance with ``dataclasses.replace`` instead.
+    """
+
+    id = "frozen-setattr"
+    paths = ("src/repro/",)
+
+    def check(self, f: SourceFile) -> Iterator[Finding]:
+        # walk with an explicit function-name stack so each call knows
+        # its innermost enclosing def
+        stack: List[str] = []
+
+        def visit(node: ast.AST) -> Iterator[Finding]:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                stack.append(node.name)
+                for child in ast.iter_child_nodes(node):
+                    yield from visit(child)
+                stack.pop()
+                return
+            if isinstance(node, ast.Call):
+                fn = node.func
+                if (isinstance(fn, ast.Attribute)
+                        and fn.attr == "__setattr__"
+                        and isinstance(fn.value, ast.Name)
+                        and fn.value.id == "object"
+                        and (not stack or stack[-1] != "__post_init__")):
+                    yield Finding(
+                        f.path, node.lineno, self.id,
+                        "object.__setattr__ outside __post_init__ "
+                        "mutates a frozen dataclass; use "
+                        "dataclasses.replace")
+            for child in ast.iter_child_nodes(node):
+                yield from visit(child)
+
+        yield from visit(f.tree)
+
+
+# ---------------------------------------------------------------------------
+# rule 7: scheduling at a non-delay time expression
+
+
+@register_rule
+class SchedulePastRule(Rule):
+    """Delays passed to ``timeout``/``_schedule`` must be relative, not
+    absolute.
+
+    The heap orders on absolute time computed as ``now + delay``;
+    passing an absolute timestamp (any ``.now``-positive expression) or
+    a negative constant schedules the event far in the future or in the
+    past.  A correct absolute-to-relative conversion subtracts ``now``
+    (``t - sim.now``), which this rule recognises by sign analysis.
+    """
+
+    id = "sched-past"
+    paths = SIM_PATHS
+
+    _SCHED_FNS = frozenset({"timeout", "_schedule", "schedule"})
+
+    def _now_signs(self, node: ast.AST, sign: int, out: List[int]) -> None:
+        if isinstance(node, ast.BinOp):
+            if isinstance(node.op, ast.Add):
+                self._now_signs(node.left, sign, out)
+                self._now_signs(node.right, sign, out)
+                return
+            if isinstance(node.op, ast.Sub):
+                self._now_signs(node.left, sign, out)
+                self._now_signs(node.right, -sign, out)
+                return
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+            self._now_signs(node.operand, -sign, out)
+            return
+        name = _terminal_name(node) if isinstance(
+            node, (ast.Name, ast.Attribute)) else None
+        if name == "now":
+            out.append(sign)
+        # other node kinds (calls, subscripts) are opaque: no recursion,
+        # so `max(0.0, t - now)` claims nothing about `now`
+
+    def check(self, f: SourceFile) -> Iterator[Finding]:
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call) or not node.args:
+                continue
+            if _terminal_name(node.func) not in self._SCHED_FNS:
+                continue
+            delay = node.args[0]
+            if isinstance(delay, ast.UnaryOp) \
+                    and isinstance(delay.op, ast.USub) \
+                    and isinstance(delay.operand, ast.Constant):
+                yield Finding(
+                    f.path, node.lineno, self.id,
+                    "negative constant delay schedules an event in "
+                    "the past")
+                continue
+            signs: List[int] = []
+            self._now_signs(delay, 1, signs)
+            if signs and min(signs) > 0:
+                yield Finding(
+                    f.path, node.lineno, self.id,
+                    "absolute time passed as a delay (a `now` term "
+                    "with positive sign and no `- now`); pass "
+                    "`t - sim.now` instead")
+
+
+# ---------------------------------------------------------------------------
+# rule 8: spec construction with unknown kwargs (cross-file)
+
+
+@register_rule
+class SpecKwargsRule(Rule):
+    """``LoadSpec``/``Scenario``-family constructors must only receive
+    known field names.
+
+    The spec dataclasses are data-only: a misspelled kwarg raises
+    ``TypeError`` at runtime, but only on the code path that builds it —
+    a scenario file with a typo'd field can sit broken until the suite
+    reaches it.  This rule checks every literal construction against
+    the dataclass's declared fields.
+    """
+
+    id = "spec-kwargs"
+
+    _SPEC_CLASSES = frozenset({
+        "LoadSpec", "Scenario", "FunctionProfile", "ArrivalSpec",
+        "AutoscalerSpec", "SearchSpec", "FleetSpec"})
+
+    def finalize(self, project: Project) -> Iterator[Finding]:
+        fields: Dict[str, Set[str]] = {}
+        # classmethod alt-constructors: name -> (params, has_kwargs)
+        methods: Dict[Tuple[str, str], Tuple[Set[str], bool]] = {}
+
+        for f in project.files:
+            for node in ast.walk(f.tree):
+                if not isinstance(node, ast.ClassDef) \
+                        or node.name not in self._SPEC_CLASSES:
+                    continue
+                if not any(_terminal_name(
+                        d.func if isinstance(d, ast.Call) else d)
+                        == "dataclass" for d in node.decorator_list):
+                    continue
+                fs: Set[str] = set()
+                for stmt in node.body:
+                    if isinstance(stmt, ast.AnnAssign) \
+                            and isinstance(stmt.target, ast.Name) \
+                            and not stmt.target.id.startswith("_"):
+                        ann = ast.dump(stmt.annotation)
+                        if "ClassVar" not in ann:
+                            fs.add(stmt.target.id)
+                    elif isinstance(stmt, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef)):
+                        is_cm = any(_terminal_name(d) == "classmethod"
+                                    for d in stmt.decorator_list)
+                        if is_cm:
+                            a = stmt.args
+                            params = {p.arg for p in
+                                      (a.args[1:] + a.kwonlyargs)}
+                            methods[(node.name, stmt.name)] = (
+                                params, a.kwarg is not None)
+                fields[node.name] = fs
+
+        if not fields:
+            return
+
+        for f in project.files:
+            for node in ast.walk(f.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = node.func
+                name = _terminal_name(fn)
+                valid: Optional[Set[str]] = None
+                label = name
+                if name in fields:
+                    valid = fields[name]
+                elif isinstance(fn, ast.Attribute):
+                    owner = _value_terminal(fn)
+                    if owner in fields and (owner, name) in methods:
+                        params, has_kwargs = methods[(owner, name)]
+                        if has_kwargs:
+                            # e.g. LoadSpec.single(**kw): kw forwards to
+                            # the dataclass, so check against its fields
+                            valid = fields[owner] | params
+                        else:
+                            valid = params
+                        label = f"{owner}.{name}"
+                if valid is None:
+                    continue
+                for kw in node.keywords:
+                    if kw.arg is not None and kw.arg not in valid:
+                        yield Finding(
+                            f.path, node.lineno, self.id,
+                            f"unknown kwarg {kw.arg!r} for {label}(); "
+                            f"valid: {', '.join(sorted(valid))}")

@@ -18,12 +18,12 @@ from repro.core.firecracker import Firecracker, SnapshotCache
 from repro.core.gvisor import GVisor
 from repro.core.junction import JunctionInstance, UProc
 from repro.core.junctiond import Junctiond
-from repro.core.quark import Quark
-from repro.core.wasm import WasmSandbox
 from repro.core.netstack import NetStack
+from repro.core.quark import Quark
 from repro.core.resources import CorePool
 from repro.core.scheduler import JunctionScheduler, PollingModel
 from repro.core.simulator import Event, EventLoop, Process, Queue, Simulator
+from repro.core.wasm import WasmSandbox
 from repro.core.workload import (ArrivalProcess, BurstyArrivals, ChainEdge,
                                  DiurnalArrivals, FusionPlan, KneeSearch,
                                  KneeSearchResult, LatencySummary, LoadSpec,
@@ -56,3 +56,12 @@ __all__ = [
     "knee_index_of_curve", "KneeSearch", "KneeSearchResult",
     "run_mixed_open_loop",
 ]
+
+# Opt-in runtime invariant checks (see repro.analysis.sanitizer): with
+# REPRO_SIM_CHECK=1 in the environment, every process importing the sim
+# core runs with the checked EventLoop/CorePool wrappers installed.
+import os as _os
+
+if _os.environ.get("REPRO_SIM_CHECK", "") not in ("", "0"):
+    from repro.analysis import sanitizer as _sanitizer
+    _sanitizer.install()

@@ -8,7 +8,7 @@ latency-only components just advance time.
 """
 from __future__ import annotations
 
-from typing import Generator, Optional
+from typing import Generator
 
 from repro.core.latency import StackCosts
 from repro.core.resources import CorePool

@@ -163,7 +163,13 @@ class EventLoop:
         Mirrors :meth:`Simulator.run` clock/stop semantics: the clock
         lands on ``until`` unless :meth:`Simulator.stop` fired, and
         events beyond ``until`` stay queued.  Returns the number of
-        arrivals delivered."""
+        arrivals delivered.
+
+        Invariant: the clock never moves backwards — every popped event
+        and every admitted arrival is timestamped at or after ``now``.
+        ``repro.analysis.sanitizer`` swaps in an operation-for-operation
+        copy of this loop that asserts it (keep the two in sync when
+        editing)."""
         sim = self.sim
         heap = sim._heap
         pop = heapq.heappop

@@ -13,7 +13,7 @@ import heapq
 import math
 import warnings
 from typing import (Callable, Dict, List, Mapping, Optional, Protocol,
-                    Sequence, Tuple, Union)
+                    Sequence, Tuple)
 
 import numpy as np
 
@@ -844,6 +844,20 @@ def _drive_process(runtime: FaasdRuntime, load: LoadSpec,
 # unfused accounting on contention-free schedules.
 FUSED_FAST_PATH = True
 
+# Runtime sim-sanitizer hook (repro.analysis.sanitizer): when flipped on
+# (REPRO_SIM_CHECK=1 or sanitizer.install()), the fused-admit branches
+# below assert their preconditions via _fused_admit_check.  Same
+# zero-overhead pattern as FUSED_FAST_PATH: drivers hoist the flag to a
+# local once per run, so the disabled cost is one boolean read per run.
+SIM_CHECK = False
+
+
+def _fused_admit_check(pool, t, end_t, off_end_t=None):
+    """Delegate to the sanitizer's fused-admit assertion (imported
+    lazily: only ever called when SIM_CHECK is on)."""
+    from repro.analysis.sanitizer import fused_admit_check
+    fused_admit_check(pool, t, end_t, off_end_t)
+
 
 def _sample_request_matrices(runtime_of, fn_names, picks, rng, n):
     """Vectorized per-request cost matrices for one run, sampled once per
@@ -1117,6 +1131,7 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
     st_weight = InvocationPlan.STATION_BACKLOG_WEIGHT
     observed = obs is not _NULL_OBSERVER
     fuse = FUSED_FAST_PATH
+    check = SIM_CHECK
     t_warm = t0 + warmup_s
     outstanding = 0
     busy_time = 0.0
@@ -1157,6 +1172,9 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
                 off = OFFL[i]
                 if off > 0.0:
                     if b + 2 < pool.n_cores:
+                        if check:
+                            _fused_admit_check(pool, t, ENDL[i],
+                                               OFFENDL[i])
                         pool.busy = b + 2
                         fused[i] = 1
                         push(heap, (ENDL[i], next(counter),
@@ -1164,6 +1182,8 @@ def _drive_events(runtime: FaasdRuntime, load: LoadSpec,
                         hpush(off_pend, OFFENDL[i])
                         return
                 elif b + 1 < pool.n_cores:
+                    if check:
+                        _fused_admit_check(pool, t, ENDL[i])
                     pool.busy = b + 1
                     fused[i] = 1
                     push(heap, (ENDL[i], next(counter), _fused_done, (i,)))

@@ -19,7 +19,7 @@ Baseline policy (the §Perf hillclimb iterates on this):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding

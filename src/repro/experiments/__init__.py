@@ -2,10 +2,10 @@
 # arrival process, duration, backend matrix) executed by ExperimentRunner
 # into machine-readable BENCH_<suite>.json artifacts with per-scenario
 # histograms, knee/SLO metrics, and paper-claim deltas.
+from repro.core.workload import ChainEdge, FusionPlan
 from repro.experiments.artifacts import (build_artifact, latency_histogram,
                                          metric_row, metrics_csv,
                                          validate_artifact, write_artifact)
-from repro.core.workload import ChainEdge, FusionPlan
 from repro.experiments.runner import ExperimentRunner
 from repro.experiments.scenario import (DEFAULT_BACKENDS,
                                         DEFAULT_CLAIMS_PAIR, ArrivalSpec,

@@ -839,9 +839,11 @@ _MODES = {"closed": _exec_closed, "open": _exec_open, "storm": _exec_storm,
 def _run_backend(item: Tuple[Scenario, str, float, bool]):
     """Worker entry point: one (scenario, backend) cell of the matrix."""
     sc, backend, duration_scale, smoke = item
+    # simlint: allow[wall-clock] measures host elapsed time of the worker
     t0 = time.time()
     try:
         res = _MODES[sc.mode](sc, backend, duration_scale, smoke)
+        # simlint: allow[wall-clock] elapsed_s reports host wall time
         res["elapsed_s"] = round(time.time() - t0, 2)
         return sc.name, backend, res, None
     except Exception:
@@ -1191,6 +1193,7 @@ class ExperimentRunner:
                   suite: str = "scenarios") -> Dict[str, object]:
         items = [(sc, backend, self.duration_scale, self.smoke)
                  for sc in scenarios for backend in sc.backends]
+        # simlint: allow[wall-clock] suite wall_s measures host elapsed time
         t0 = time.time()
         raw = self._execute(items)
         by_name: Dict[str, Dict[str, dict]] = {}
@@ -1296,6 +1299,7 @@ class ExperimentRunner:
         meta = {
             "smoke": self.smoke,
             "workers": self.workers,
+            # simlint: allow[wall-clock] wall_s reports host wall time
             "wall_s": round(time.time() - t0, 2),
             "n_scenarios": len(scenarios),
             "backends": sorted({b for sc in scenarios for b in sc.backends}),

@@ -150,6 +150,7 @@ def drive_cluster(cluster: Cluster, load: LoadSpec,
     observed = not isinstance(obs, NullObserver)
     autoscaled = any(w.autoscaler is not None for w in workers)
     fuse = _workload.FUSED_FAST_PATH
+    check = _workload.SIM_CHECK
     t_warm = t0 + warmup_s
     outstanding = 0
     admitted = 0
@@ -257,12 +258,17 @@ def drive_cluster(cluster: Cluster, load: LoadSpec,
             off = OFFL[i]
             if off > 0.0:
                 if b + 2 < pool.n_cores:
+                    if check:
+                        _workload._fused_admit_check(pool, t, ENDL[i],
+                                                     OFFENDL[i])
                     pool.busy = b + 2
                     fused[i] = 1
                     push(heap, (ENDL[i], next(counter), _fused_done, (i,)))
                     hpush(off_pend, OFFENDL[i])
                     return
             elif b + 1 < pool.n_cores:
+                if check:
+                    _workload._fused_admit_check(pool, t, ENDL[i])
                 pool.busy = b + 1
                 fused[i] = 1
                 push(heap, (ENDL[i], next(counter), _fused_done, (i,)))

@@ -12,7 +12,7 @@ least-loaded cold worker, paying the image-distribution cost mid-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set, TYPE_CHECKING
+from typing import TYPE_CHECKING, Dict, List, Optional, Set
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.fleet.cluster import Cluster, Worker

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import abc
 import zlib
-from typing import Dict, List, Sequence, Type, TYPE_CHECKING
+from typing import TYPE_CHECKING, Dict, List, Sequence, Type
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.fleet.cluster import Worker

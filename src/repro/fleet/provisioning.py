@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Tuple, Type
+from typing import Deque, Dict, List, Type
 
 from repro.core.simulator import Event, Simulator
 

@@ -6,7 +6,6 @@ this keeps everything trivially compatible with jit / scan / pjit.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

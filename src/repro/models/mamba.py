@@ -84,7 +84,8 @@ def mamba_forward(params: dict, x: jnp.ndarray, cfg: ArchConfig,
     dt, dtx, Bm, Cm = _ssm_terms(params, xs, cfg)
     h0 = jnp.zeros((B, di, ds), jnp.float32) if state is None else state["h"]
     A = -jnp.exp(params["A_log"])                                 # (di,ds)
-    t0 = lambda t: jnp.moveaxis(t, 1, 0)                          # time-major
+    def t0(t):
+        return jnp.moveaxis(t, 1, 0)                              # time-major
     inputs = (t0(dt), t0(dtx), t0(Bm), t0(Cm))
 
     def make_ab(cin):

@@ -98,7 +98,8 @@ def rwkv_time_mix(params: dict, x: jnp.ndarray, cfg: ArchConfig,
     rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
     S0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None else state["wkv"])
     u = params["bonus_u"]
-    t0 = lambda t: jnp.moveaxis(t, 1, 0)                          # time-major
+    def t0(t):
+        return jnp.moveaxis(t, 1, 0)                              # time-major
     inputs = (t0(rf), t0(kf), t0(vf), t0(wf))
 
     def make_ab(cin):

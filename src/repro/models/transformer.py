@@ -18,13 +18,12 @@ caches), ``decode_step`` (ONE token against the caches).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import ArchConfig, ArchType, BlockKind
+from repro.config import ArchConfig, BlockKind
 from repro.models import attention as attn
 from repro.models import mamba as mb
 from repro.models import moe as moe_mod

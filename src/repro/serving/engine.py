@@ -7,16 +7,14 @@ models on the production mesh).
 """
 from __future__ import annotations
 
-import functools
 import time
-from typing import Dict, List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import ArchConfig
 from repro.models import transformer as T
-from repro.models.frontends import stub_frontend_embeddings
 from repro.serving.batcher import ContinuousBatcher
 from repro.serving.kvcache import PagedKVManager
 from repro.serving.sampling import sample

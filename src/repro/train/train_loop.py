@@ -1,7 +1,6 @@
 """Training loop: jitted train_step factory + driver."""
 from __future__ import annotations
 
-import functools
 import time
 from typing import Callable, Dict, Iterator, Optional
 

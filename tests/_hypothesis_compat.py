@@ -5,6 +5,8 @@ property tests collect as skipped and the rest of the module still runs.
 """
 import pytest
 
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st

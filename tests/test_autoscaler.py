@@ -4,14 +4,13 @@ backend-sourced replica truth and structured scale-event telemetry, the
 workload-driver hooks, the per-backend reaction-time ordering (the
 control-plane analogue of the fig5/coldstart orderings), schema-v3
 artifacts, and the runner's autoscaled scenarios."""
-import dataclasses
-
 import pytest
 
-from repro.core import (Autoscaler, FaasdRuntime, FunctionSpec, LoadSpec,
-                        LeadTimePolicy, QueueDepthPolicy, ScalePolicy,
-                        Simulator, available_backends, drive,
-                        get_backend_class, run_sequential, PoissonArrivals)
+from repro.core import (Autoscaler, FaasdRuntime, FunctionSpec,
+                        LeadTimePolicy, LoadSpec, PoissonArrivals,
+                        QueueDepthPolicy, ScalePolicy, Simulator,
+                        available_backends, drive, get_backend_class,
+                        run_sequential)
 from repro.experiments import (AutoscalerSpec, ExperimentRunner,
                                build_artifact, get_scenario, get_suite,
                                metric_row, validate_artifact)

@@ -18,7 +18,7 @@ import pytest
 from repro.core import (FaasdRuntime, FunctionSpec, PollingModel, Simulator,
                         UnknownFunctionError, available_backends,
                         get_backend_class, register_backend, run_sequential)
-from repro.core.backends import (ColdStartModel, ExecutionBackend, _REGISTRY,
+from repro.core.backends import (_REGISTRY, ColdStartModel,
                                  resolve_backend)
 from repro.core.firecracker import SnapshotCache
 from repro.core.gvisor import GVisor

@@ -1,12 +1,8 @@
 """Config registry, reduced-variant contract, sharding rule engine, and
 HLO collective parser units (no 512-device init needed here)."""
-import dataclasses
-
 import jax
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
-
-import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.analysis.hlo_parse import parse_collectives
 from repro.config import ALL_SHAPES, StepKind, get_arch, list_archs, reduced

@@ -1,7 +1,6 @@
 """Units for the dry-run machinery that don't need 512 devices: input
 specs, probe layer counts, serving variants, roofline extrapolation."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.analysis.roofline import ProbePoint, build_roofline, extrapolate

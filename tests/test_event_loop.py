@@ -7,6 +7,8 @@ batches, so the two engines consume the RNG differently — equivalence is
 *statistical* (same-seed distributional agreement within tolerances),
 while each engine on its own is byte-identical across same-seed runs.
 """
+from pathlib import Path
+
 import numpy as np
 import pytest
 
@@ -199,6 +201,19 @@ def test_legacy_shims_delegate_and_warn():
     for key in ("achieved_rps", "completion_rps", "median_ms", "p99_ms",
                 "completed_frac", "rejected", "per_fn", "latencies_ms"):
         assert key in mixed, key
+
+
+def test_shim_call_site_count_is_pinned():
+    """The two calls above are the only shim call sites in the tree.
+
+    simlint's deprecated-shim rule blocks new call sites in CI; this
+    pin makes a stray one fail tier-1 even without the lint job.  If
+    you added a call on purpose, don't bump the number — call
+    ``drive(runtime, LoadSpec, ...)`` instead."""
+    from repro.analysis.lint_rules import count_shim_call_sites
+    root = Path(__file__).resolve().parent.parent
+    assert count_shim_call_sites(
+        ["src", "tests", "benchmarks"], root=root) == 2
 
 
 def test_loadspec_validation_and_defaults():

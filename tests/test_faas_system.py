@@ -7,10 +7,9 @@ from repro.core import (FaasdRuntime, FunctionSpec, JunctionInstance,
                         LatencySummary, PollingModel, Simulator,
                         run_sequential)
 from repro.core.latency import (CONTAINERD_COLDSTART_MS,
-                                JUNCTION_INSTANCE_INIT_MS)
-from repro.core.scheduler import JunctionScheduler
+                                JUNCTION_INSTANCE_INIT_MS, JUNCTION_RUNTIME)
 from repro.core.resources import CorePool
-from repro.core.latency import JUNCTION_RUNTIME
+from repro.core.scheduler import JunctionScheduler
 
 
 def _runtime(backend, seed=0, **kw):

@@ -8,7 +8,6 @@ per-worker telemetry, same-seed byte-identical determinism — including
 a recorded trace split across N workers with no duplicated or dropped
 arrivals — and the schema-v5 fleet artifact contract.
 """
-import dataclasses
 import json
 
 import pytest
@@ -17,8 +16,8 @@ from repro.core import FaasdRuntime, FunctionSpec, LoadSpec, Simulator, drive
 from repro.core.workload import TraceReplay
 from repro.experiments import (FleetSpec, Scenario, build_artifact,
                                validate_artifact)
-from repro.experiments.scenario import ArrivalSpec, FunctionProfile
 from repro.experiments.runner import _exec_fleet
+from repro.experiments.scenario import ArrivalSpec, FunctionProfile
 from repro.fleet import (Cluster, FaasNetTree, Gateway,
                          LeastLoadedPlacement, LocalityPlacement,
                          NaiveRegistryPull, RoundRobinPlacement, SharedLink,

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.config import get_arch, list_archs, reduced
+from repro.config import get_arch, reduced
 from repro.models import moe as moe_mod
 from repro.models import transformer as T
 from repro.models.attention import causal_mask

@@ -2,7 +2,6 @@
 continuous batcher lifecycle, engine generation."""
 import dataclasses
 
-import jax
 import pytest
 from _hypothesis_compat import given, settings, st
 

@@ -1,0 +1,446 @@
+"""simlint: per-rule good/bad fixtures, pragma semantics, CLI contract.
+
+Every rule gets at least one failing and one passing fixture (rules
+with zero in-repo violations are still exercised here), written into a
+tmp tree shaped like the repo (``src/repro/core/...``) so path-scoped
+rules fire.  The suite also pins the CLI's exit-code semantics and the
+``--list`` registry output, and checks the real tree is clean.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis.lint import main as lint_main
+from repro.analysis.lint_engine import run_lint
+from repro.analysis.lint_rules import RULES
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def lint_snippet(tmp_path, relpath, source, rules=None):
+    """Write ``source`` at ``relpath`` under a repo-shaped tmp tree and
+    lint it; returns the findings."""
+    target = tmp_path / relpath
+    target.parent.mkdir(parents=True, exist_ok=True)
+    target.write_text(source)
+    return run_lint([relpath], root=str(tmp_path), rule_ids=rules)
+
+
+def rule_ids_of(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# rule registry
+
+
+def test_registry_has_the_contract_rules():
+    expected = {"wall-clock", "unordered-iter", "registry-reachable",
+                "float-eq", "deprecated-shim", "frozen-setattr",
+                "sched-past", "spec-kwargs"}
+    assert expected <= set(RULES)
+
+
+def test_every_rule_has_doc_and_id():
+    for rid, rule in RULES.items():
+        assert rule.id == rid
+        assert rule.summary, f"rule {rid} has no docstring"
+
+
+# ---------------------------------------------------------------------------
+# rule 1: wall-clock
+
+
+BAD_WALL = """\
+import time
+
+def f():
+    return time.time()
+"""
+
+GOOD_WALL = """\
+def f(sim):
+    return sim.now
+"""
+
+
+def test_wall_clock_bad(tmp_path):
+    findings = lint_snippet(tmp_path, "src/repro/core/x.py", BAD_WALL)
+    assert rule_ids_of(findings) == {"wall-clock"}
+    assert findings[0].line == 4
+
+
+def test_wall_clock_variants(tmp_path):
+    for src in (
+        "from time import perf_counter\nperf_counter()\n",
+        "import random\n",
+        "from random import random\n",
+        "import uuid\n",
+        "from datetime import datetime\ndatetime.now()\n",
+        "import datetime\ndatetime.datetime.now()\n",
+    ):
+        findings = lint_snippet(tmp_path, "src/repro/fleet/x.py", src)
+        assert "wall-clock" in rule_ids_of(findings), src
+
+
+def test_wall_clock_good(tmp_path):
+    findings = lint_snippet(tmp_path, "src/repro/core/x.py", GOOD_WALL)
+    assert findings == []
+
+
+def test_wall_clock_out_of_scope_paths_ignored(tmp_path):
+    # the JAX serving stack measures real host time by design
+    findings = lint_snippet(tmp_path, "src/repro/serving/x.py", BAD_WALL)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# rule 2: unordered iteration
+
+
+def test_unordered_iter_bad(tmp_path):
+    for src in (
+        "for x in {1, 2, 3}:\n    pass\n",
+        "for x in set(items):\n    pass\n",
+        "ys = [f(x) for x in names.intersection(live)]\n",
+        "h = hash(name)\n",
+        "xs.sort(key=id)\n",
+    ):
+        findings = lint_snippet(tmp_path, "src/repro/core/x.py", src)
+        assert "unordered-iter" in rule_ids_of(findings), src
+
+
+def test_unordered_iter_good(tmp_path):
+    for src in (
+        "for x in sorted({1, 2, 3}):\n    pass\n",
+        "for x in sorted(set(items)):\n    pass\n",
+        "import zlib\nh = zlib.crc32(name.encode())\n",
+    ):
+        findings = lint_snippet(tmp_path, "src/repro/core/x.py", src)
+        assert findings == [], src
+
+
+def test_unordered_iter_only_in_sim_paths(tmp_path):
+    findings = lint_snippet(
+        tmp_path, "src/repro/experiments/x.py",
+        "for x in {1, 2}:\n    pass\n")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# rule 3: registry reachability (cross-file)
+
+
+REGISTRY_DEF = """\
+_BUILTIN_MODULES = (
+    "repro.core.good",
+)
+"""
+
+REGISTERED = """\
+from repro.core.backends import register_backend
+
+@register_backend
+class Thing:
+    name = "thing"
+"""
+
+
+def test_registry_reachable_bad(tmp_path):
+    (tmp_path / "src/repro/core").mkdir(parents=True)
+    (tmp_path / "src/repro/core/backends.py").write_text(REGISTRY_DEF)
+    (tmp_path / "src/repro/core/stray.py").write_text(REGISTERED)
+    findings = run_lint(["src"], root=str(tmp_path),
+                        rule_ids=["registry-reachable"])
+    assert [f.rule for f in findings] == ["registry-reachable"]
+    assert "repro.core.stray" in findings[0].message
+
+
+def test_registry_reachable_good(tmp_path):
+    (tmp_path / "src/repro/core").mkdir(parents=True)
+    (tmp_path / "src/repro/core/backends.py").write_text(
+        '_BUILTIN_MODULES = (\n    "repro.core.good",\n)\n')
+    (tmp_path / "src/repro/core/good.py").write_text(REGISTERED)
+    findings = run_lint(["src"], root=str(tmp_path),
+                        rule_ids=["registry-reachable"])
+    assert findings == []
+
+
+def test_registry_reachable_fleet_init(tmp_path):
+    pkg = tmp_path / "src/repro/fleet"
+    pkg.mkdir(parents=True)
+    (pkg / "__init__.py").write_text("from repro.fleet import placement\n")
+    (pkg / "placement.py").write_text(
+        "from repro.fleet.registry import register_placement\n\n"
+        "@register_placement\nclass RR:\n    name = 'rr'\n")
+    (pkg / "stray.py").write_text(
+        "from repro.fleet.registry import register_distribution\n\n"
+        "@register_distribution\nclass Tree:\n    name = 'tree'\n")
+    findings = run_lint(["src"], root=str(tmp_path),
+                        rule_ids=["registry-reachable"])
+    assert [f.rule for f in findings] == ["registry-reachable"]
+    assert "repro.fleet.stray" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# rule 4: float equality
+
+
+def test_float_eq_bad(tmp_path):
+    for src in (
+        "hit = rate == knee\n",
+        "if row_rps == 128.0:\n    pass\n",
+        "same = t0 != t1\n",
+        'match = row["nominal_rps"] == rate\n',
+    ):
+        findings = lint_snippet(tmp_path, "src/repro/core/x.py", src)
+        assert "float-eq" in rule_ids_of(findings), src
+
+
+def test_float_eq_good(tmp_path):
+    for src in (
+        "hit = abs(rate - knee) < 1e-9\n",
+        "done = count == 0\n",          # int compare: fine
+        "ok = name == 'aes'\n",
+        "if rate > knee:\n    pass\n",
+    ):
+        findings = lint_snippet(tmp_path, "src/repro/core/x.py", src)
+        assert findings == [], src
+
+
+# ---------------------------------------------------------------------------
+# rule 5: deprecated shims
+
+
+def test_deprecated_shim_bad(tmp_path):
+    for src in (
+        "res = run_open_loop(rt, 'aes', 100.0)\n",
+        "from repro.core import run_mixed_open_loop\n",
+        "w.run_mixed_open_loop(rt, {})\n",
+    ):
+        findings = lint_snippet(tmp_path, "src/repro/core/new.py", src)
+        assert "deprecated-shim" in rule_ids_of(findings), src
+
+
+def test_deprecated_shim_exempt_files(tmp_path):
+    findings = lint_snippet(
+        tmp_path, "tests/test_event_loop.py",
+        "res = run_open_loop(rt, 'aes', 100.0)\n")
+    assert findings == []
+
+
+def test_deprecated_shim_good(tmp_path):
+    findings = lint_snippet(
+        tmp_path, "src/repro/core/new.py",
+        "res = drive(rt, load)\n")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# rule 6: frozen-dataclass mutation
+
+
+def test_frozen_setattr_bad(tmp_path):
+    src = ("def tweak(spec, rate):\n"
+           "    object.__setattr__(spec, 'rate_rps', rate)\n")
+    findings = lint_snippet(tmp_path, "src/repro/core/x.py", src)
+    assert rule_ids_of(findings) == {"frozen-setattr"}
+
+
+def test_frozen_setattr_good(tmp_path):
+    src = ("class Spec:\n"
+           "    def __post_init__(self):\n"
+           "        object.__setattr__(self, 'functions', ())\n")
+    findings = lint_snippet(tmp_path, "src/repro/core/x.py", src)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# rule 7: scheduling into the past
+
+
+def test_sched_past_bad(tmp_path):
+    for src in (
+        "sim._schedule(-0.5, cb)\n",
+        "sim._schedule(sim.now + 0.1, cb)\n",      # absolute, not delay
+        "sim.timeout(t0 + now)\n",
+    ):
+        findings = lint_snippet(tmp_path, "src/repro/core/x.py", src)
+        assert "sched-past" in rule_ids_of(findings), src
+
+
+def test_sched_past_good(tmp_path):
+    for src in (
+        "sim._schedule(t - sim.now, cb)\n",
+        "sim._schedule(avail_t - now, cb)\n",
+        "sim.timeout(t0 + rel_t - sim.now)\n",
+        "sim.timeout(0.25)\n",
+        "sim.timeout(max(0.0, t - sim.now))\n",    # opaque call: no claim
+    ):
+        findings = lint_snippet(tmp_path, "src/repro/core/x.py", src)
+        assert findings == [], src
+
+
+# ---------------------------------------------------------------------------
+# rule 8: spec kwargs (cross-file)
+
+
+SPEC_DEF = """\
+import dataclasses
+
+@dataclasses.dataclass(frozen=True)
+class LoadSpec:
+    arrivals: object
+    functions: tuple
+    duration_s: float = 2.0
+
+    @classmethod
+    def single(cls, fn_name, rate_rps, **kw):
+        return cls(arrivals=None, functions=(fn_name,), **kw)
+"""
+
+
+def _spec_tree(tmp_path, use_src):
+    (tmp_path / "src/repro/core").mkdir(parents=True)
+    (tmp_path / "src/repro/core/workload.py").write_text(SPEC_DEF)
+    (tmp_path / "src/repro/core/user.py").write_text(use_src)
+    return run_lint(["src"], root=str(tmp_path), rule_ids=["spec-kwargs"])
+
+
+def test_spec_kwargs_bad(tmp_path):
+    findings = _spec_tree(
+        tmp_path,
+        "from repro.core.workload import LoadSpec\n"
+        "spec = LoadSpec(arrivals=None, functions=('aes',),\n"
+        "                durration_s=2.0)\n")
+    assert [f.rule for f in findings] == ["spec-kwargs"]
+    assert "durration_s" in findings[0].message
+
+
+def test_spec_kwargs_classmethod_forwarding(tmp_path):
+    bad = _spec_tree(
+        tmp_path,
+        "from repro.core.workload import LoadSpec\n"
+        "spec = LoadSpec.single('aes', 100.0, duratoin_s=1.0)\n")
+    assert [f.rule for f in bad] == ["spec-kwargs"]
+
+
+def test_spec_kwargs_good(tmp_path):
+    findings = _spec_tree(
+        tmp_path,
+        "from repro.core.workload import LoadSpec\n"
+        "spec = LoadSpec(arrivals=None, functions=('aes',),\n"
+        "                duration_s=1.0)\n"
+        "also = LoadSpec.single('aes', 100.0, duration_s=1.0)\n")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+
+
+def test_pragma_suppresses_trailing(tmp_path):
+    src = ("import time\n"
+           "t0 = time.time()  # simlint: allow[wall-clock] measures host\n")
+    findings = lint_snippet(tmp_path, "src/repro/core/x.py", src)
+    assert findings == []
+
+
+def test_pragma_suppresses_preceding_comment_line(tmp_path):
+    src = ("import time\n"
+           "# simlint: allow[wall-clock] measures host elapsed\n"
+           "t0 = time.time()\n")
+    findings = lint_snippet(tmp_path, "src/repro/core/x.py", src)
+    assert findings == []
+
+
+def test_pragma_without_reason_is_rejected(tmp_path):
+    src = ("import time\n"
+           "t0 = time.time()  # simlint: allow[wall-clock]\n")
+    findings = lint_snippet(tmp_path, "src/repro/core/x.py", src)
+    rules = rule_ids_of(findings)
+    # the suppression must NOT take effect, and the pragma itself is
+    # reported
+    assert "wall-clock" in rules
+    assert "pragma" in rules
+    assert any("reason" in f.message for f in findings)
+
+
+def test_pragma_unknown_rule_and_verb_rejected(tmp_path):
+    # the pragma text is assembled at runtime so this file's own lines
+    # don't scan as (broken) pragmas when the real tree is linted
+    src = ("x = 1  # simlint" ": allow[no-such-rule] because\n"
+           "y = 2  # simlint" ": ignore[wall-clock] because\n")
+    findings = lint_snippet(tmp_path, "src/repro/core/x.py", src)
+    msgs = " | ".join(f.message for f in findings)
+    assert "unknown rule" in msgs
+    assert "verb" in msgs
+
+
+def test_pragma_only_suppresses_named_rule(tmp_path):
+    src = ("import time\n"
+           "t0 = time.time()  # simlint: allow[float-eq] wrong rule id\n")
+    findings = lint_snippet(tmp_path, "src/repro/core/x.py", src)
+    assert "wall-clock" in rule_ids_of(findings)
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+
+
+def test_cli_list_exits_zero(capsys):
+    assert lint_main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for rid in RULES:
+        assert rid in out
+
+
+def test_cli_no_paths_is_usage_error():
+    assert lint_main([]) == 2
+
+
+def test_cli_unknown_rule_is_usage_error(tmp_path):
+    (tmp_path / "x.py").write_text("pass\n")
+    assert lint_main(["x.py", "--root", str(tmp_path),
+                      "--rules", "no-such-rule"]) == 2
+
+
+def test_cli_findings_exit_one_and_print_rule_and_location(
+        tmp_path, capsys):
+    target = tmp_path / "src/repro/core/x.py"
+    target.parent.mkdir(parents=True)
+    target.write_text(BAD_WALL)
+    rc = lint_main(["src", "--root", str(tmp_path)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "src/repro/core/x.py:4: [wall-clock]" in out
+
+
+def test_cli_clean_tree_exits_zero(tmp_path, capsys):
+    target = tmp_path / "src/repro/core/x.py"
+    target.parent.mkdir(parents=True)
+    target.write_text(GOOD_WALL)
+    assert lint_main(["src", "--root", str(tmp_path)]) == 0
+    assert capsys.readouterr().out == ""
+
+
+def test_syntax_error_is_reported_not_raised(tmp_path):
+    findings = lint_snippet(tmp_path, "src/repro/core/x.py",
+                            "def broken(:\n")
+    assert [f.rule for f in findings] == ["pragma"]
+    assert "syntax error" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# the real tree
+
+
+def test_real_tree_is_clean():
+    env = dict(os.environ, PYTHONPATH=str(REPO_ROOT / "src"))
+    rc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint",
+         "src", "tests", "benchmarks"],
+        cwd=REPO_ROOT, capture_output=True, text=True, env=env,
+    )
+    assert rc.returncode == 0, rc.stdout + rc.stderr

@@ -1,5 +1,4 @@
 """Unit + property tests for the discrete-event engine."""
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
